@@ -1,0 +1,27 @@
+"""Benchmark utilities: robust wall-clock timing of jitted callables."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+__all__ = ["time_fn", "emit"]
+
+
+def time_fn(fn, *args, warmup: int = 1, reps: int = 3) -> float:
+    """Median wall time (s) of fn(*args) after jit warmup."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, value, derived: str = ""):
+    """One CSV record: name,value,derived -- consumed by EXPERIMENTS.md."""
+    print(f"{name},{value},{derived}")

@@ -1,0 +1,43 @@
+"""Paper §3.2: the csize time/space dial. For fixed n, sweep csize and
+report (a) measured batched-HVP time, (b) the hDual state footprint
+2*(csize+1) floats per value -- the quantity that must fit VMEM on TPU
+(per-grid-cell bytes for the chess_hvp kernel)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import testfns
+from repro.core.api import batched_hvp
+
+
+def kernel_vmem_bytes(n, csize, blk_m, dtype_bytes=4):
+    """chess_hvp per-grid-cell hDual footprint (DESIGN.md §3)."""
+    return n * blk_m * (2 * csize + 2) * dtype_bytes
+
+
+def run(n=32, m=512, fname="rosenbrock"):
+    f = testfns.FUNCTIONS[fname](n)
+    rng = np.random.RandomState(0)
+    A = jnp.asarray(rng.uniform(-2, 2, (m, n)), jnp.float32)
+    V = jnp.asarray(rng.randn(m, n), jnp.float32)
+    for csize in (1, 2, 4, 8, 16, 32):
+        if n % csize:
+            continue
+        fn = jax.jit(lambda A, V, c=csize: batched_hvp(f, A, V, csize=c,
+                                                       level="L2"))
+        t = time_fn(fn, A, V)
+        emit(f"csize_sweep/{fname}/n{n}/c{csize}_us_per_point",
+             f"{t / m * 1e6:.3f}",
+             f"vmem_per_cell={kernel_vmem_bytes(n, csize, 8)}B")
+
+
+def main(quick: bool = False):
+    run(m=128 if quick else 512)
+
+
+if __name__ == "__main__":
+    main()

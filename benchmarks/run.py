@@ -1,0 +1,43 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+  python -m benchmarks.run [--quick] [--only seq,levels,...]
+
+Emits ``name,value,derived`` CSV; EXPERIMENTS.md quotes these. Paper-claim
+assertions (orderings, argmin placement) live in the modules and raise on
+violation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = {
+    "opcount": "benchmarks.opcount",        # §5 analysis + jaxpr validation
+    "seq": "benchmarks.seq_trends",         # Figs 3-9
+    "levels": "benchmarks.gpu_levels",      # Figs 10-12, Tables 1-3
+    "csize": "benchmarks.csize_sweep",      # §3.2 dial
+    "kernel": "benchmarks.kernel_bench",    # Pallas layer
+    "optimizer": "benchmarks.optimizer_compare",  # SophiaH/CHESSFAD vs AdamW
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    names = list(SUITES) if not args.only else args.only.split(",")
+    print("name,value,derived")
+    for name in names:
+        mod = __import__(SUITES[name], fromlist=["main"])
+        t0 = time.time()
+        mod.main(quick=args.quick)
+        print(f"# suite {name} done in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Paper Figs. 3-9: sequential (single-instance) HVP time vs n for
+  - CHESSFAD (chunked hDual engine, csize = optimal sqrt(n/2)),
+  - forward-over-forward oracle  (the `autodiff` forward-mode analogue),
+  - reverse-mode oracle          (the `HAD` analogue, jvp∘grad),
+on Rosenbrock / Ackley / Fletcher-Powell.
+
+The paper's observations to reproduce qualitatively (§7):
+  * fwd-fwd ("autodiff") and CHESSFAD grow ~quadratically; reverse-mode
+    ("HAD") has better asymptotics and crosses over near n=10-16 for
+    Rosenbrock/Ackley;
+  * CHESSFAD beats the fwd-fwd analogue across n (Fig. 9's 5-50%).
+Numbers here are CPU/XLA, so absolute values differ from the paper's C++;
+the CROSSOVER SHAPE and the CHESSFAD<fwd-fwd ordering are the claims under
+test. benchmarks.run asserts the orderings and emits CSV.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import ref, testfns
+from repro.core.api import hvp, optimal_csize
+
+NS = (2, 4, 8, 16, 32, 64)
+FUNCS = ("rosenbrock", "ackley", "fletcher_powell")
+
+
+def chessfad_time(f, a, v, csize):
+    fn = jax.jit(lambda a, v: hvp(f, a, v, csize=csize, symmetric=True))
+    return time_fn(fn, a, v)
+
+
+def fwdfwd_time(f, a, v):
+    fn = jax.jit(lambda a, v: ref.hvp_fwdfwd(f, a, v))
+    return time_fn(fn, a, v)
+
+
+def rev_time(f, a, v):
+    fn = jax.jit(lambda a, v: ref.hvp_fwdrev(f, a, v))
+    return time_fn(fn, a, v)
+
+
+def run(ns=NS, funcs=FUNCS):
+    results = {}
+    for fname in funcs:
+        for n in ns:
+            f = testfns.FUNCTIONS[fname](n)
+            a = testfns.sample_point(n, seed=1)
+            v = testfns.sample_point(n, seed=2)
+            cs = optimal_csize(n)
+            t_chess = chessfad_time(f, a, v, cs)
+            t_c1 = chessfad_time(f, a, v, 1) if n > 1 else t_chess
+            t_ff = fwdfwd_time(f, a, v)
+            t_rev = rev_time(f, a, v)
+            results[(fname, n)] = (t_chess, t_ff, t_rev, t_c1)
+            emit(f"seq/{fname}/n{n}/chessfad_us", f"{t_chess * 1e6:.1f}",
+                 f"csize={cs}")
+            emit(f"seq/{fname}/n{n}/chessfad_c1_us", f"{t_c1 * 1e6:.1f}",
+                 "csize=1 pairwise (autodiff dual2nd analogue)")
+            emit(f"seq/{fname}/n{n}/fwdfwd_us", f"{t_ff * 1e6:.1f}",
+                 "jacfwd^2 (multivariate-dual analogue)")
+            emit(f"seq/{fname}/n{n}/reverse_us", f"{t_rev * 1e6:.1f}",
+                 "HAD-analogue")
+    # Fig. 9 analogues: chunked CHESSFAD vs the two forward baselines
+    for fname in funcs:
+        rel_c1 = [results[(fname, n)][3] / results[(fname, n)][0]
+                  for n in ns]
+        gm1 = float(jnp.exp(jnp.mean(jnp.log(jnp.asarray(rel_c1)))))
+        emit(f"seq/{fname}/pairwise_over_chunked_geomean", f"{gm1:.3f}",
+             "paper Fig9 (autodiff-analogue): >1 = chunking faster")
+        rel = [results[(fname, n)][1] / results[(fname, n)][0]
+               for n in ns]
+        gm = float(jnp.exp(jnp.mean(jnp.log(jnp.asarray(rel)))))
+        emit(f"seq/{fname}/fwdfwd_over_chessfad_geomean", f"{gm:.3f}",
+             "vs multivariate-dual batch: XLA context (see EXPERIMENTS)")
+    return results
+
+
+def main(quick: bool = False):
+    run(ns=(2, 4, 8, 16) if quick else NS)
+
+
+if __name__ == "__main__":
+    main()

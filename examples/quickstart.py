@@ -1,0 +1,62 @@
+"""Quickstart: CHESSFAD chunked Hessians and HVPs in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Covers the paper's core API surface: write a function against
+repro.core.hmath, get chunked Hessians / Hessian-vector products with the
+csize dial, and cross-check against JAX's own AD.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.hmath as hm
+from repro.core import ref, testfns
+from repro.core.api import (batched_hvp, gradient, hessian, hvp,
+                            num_chunk_evals, optimal_csize)
+
+
+def my_function(x):
+    """Any composition of hmath/HDual ops works on values AND hDuals --
+    the JAX analogue of the paper's 'replace double with hDual'."""
+    return hm.sin(x[0] * x[1]) + hm.exp(x[2] * 0.5) + (x * x).sum(0)
+
+
+def main():
+    n = 8
+    a = testfns.sample_point(n, seed=0)
+
+    # --- dense Hessian, chunked (paper Alg. 6: symmetric SCHUNK-HESS) ----
+    csize = optimal_csize(n)            # paper §5: sqrt(n/2)
+    H = hessian(my_function, a, csize=csize, symmetric=True)
+    H_ref = ref.hessian_fwdrev(my_function, a)
+    print(f"Hessian ({n}x{n}), csize={csize}, "
+          f"evals={num_chunk_evals(n, csize, True)} "
+          f"(vs {n * n // csize} unsymmetric)")
+    print("  max |H - H_jax| =", float(jnp.abs(H - H_ref).max()))
+
+    # --- Hessian-vector product without materializing H (Alg. 8) --------
+    v = testfns.sample_point(n, seed=1)
+    r = hvp(my_function, a, v, csize=csize, symmetric=True)
+    print("  max |Hv - (Hv)_jax| =",
+          float(jnp.abs(r - H_ref @ v).max()))
+
+    # --- the gradient falls out of the same pass (paper §4) -------------
+    g = gradient(my_function, a, csize=csize)
+    print("  max |g - g_jax| =",
+          float(jnp.abs(g - jax.grad(my_function)(a)).max()))
+
+    # --- batched instances: the paper's GPU workload (Alg. 9/10/Fig 2) --
+    m = 64
+    rng = np.random.RandomState(0)
+    A = jnp.asarray(rng.uniform(-2, 2, (m, n)), jnp.float32)
+    V = jnp.asarray(rng.randn(m, n), jnp.float32)
+    for level in ("L0", "L1", "L2"):
+        R = batched_hvp(testfns.rosenbrock, A, V, csize=csize, level=level)
+        print(f"  batched {level}: out {R.shape}, "
+              f"finite={bool(jnp.isfinite(R).all())}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Serve a small LM with batched requests through the continuous-batching
+engine (slot reuse, per-slot positions, greedy/temperature sampling).
+
+    PYTHONPATH=src python examples/serve_lm.py --requests 12 --max-batch 4
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.params import init_params
+from repro.serving import ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(params, cfg, max_batch=args.max_batch, max_seq=256,
+                        temperature=args.temperature)
+
+    rng = np.random.RandomState(0)
+    for _ in range(args.requests):
+        plen = int(rng.randint(4, 48))
+        eng.submit(rng.randint(0, cfg.vocab_size, size=plen),
+                   max_new_tokens=args.max_new)
+
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    print(f"arch={cfg.name} served {len(done)} requests / {toks} tokens "
+          f"in {dt:.2f}s -> {toks / dt:.1f} tok/s "
+          f"(max_batch={args.max_batch})")
+    for r in done[:3]:
+        print(f"  rid={r.rid}: {r.out_tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Architecture registry: one module per assigned arch + the paper workload."""
+
+from repro.configs.base import (ARCH_NAMES, SHAPES, InputShape, ModelConfig,
+                                all_cells, cells_for, get_config)
+
+__all__ = ["ARCH_NAMES", "SHAPES", "InputShape", "ModelConfig", "all_cells",
+           "cells_for", "get_config"]

@@ -1,0 +1,17 @@
+"""repro.core -- CHESSFAD: chunked forward-mode second-order AD (the paper's
+primary contribution) as a composable JAX module."""
+
+from .hdual import HDual, lift, seed_point, is_hdual
+from . import hmath
+from .api import (eval_chunk, hessian, hvp, gradient, batched_hvp,
+                  batched_hessian, chunk_pairs, num_chunk_evals, optimal_csize)
+from . import ref
+from . import testfns
+from .distributed import distributed_batched_hvp, distributed_hvp_rows
+
+__all__ = [
+    "HDual", "lift", "seed_point", "is_hdual", "hmath",
+    "eval_chunk", "hessian", "hvp", "gradient", "batched_hvp",
+    "batched_hessian", "chunk_pairs", "num_chunk_evals", "optimal_csize",
+    "ref", "testfns", "distributed_batched_hvp", "distributed_hvp_rows",
+]

@@ -1,0 +1,247 @@
+"""CHESSFAD public API: chunked Hessian / Hessian-vector products.
+
+Paper algorithm -> this module:
+
+  Alg. 2  HESSIAN           -> hessian(..., symmetric=False)
+  Alg. 3  SYM-HESSIAN       -> csize=1 special case of symmetric chunking
+  Alg. 4  CHUNK-INIT        -> hdual.seed_point
+  Alg. 5  CHUNK-HESS        -> hessian(..., symmetric=False)
+  Alg. 6  SCHUNK-HESS       -> hessian(..., symmetric=True)
+  Alg. 7  CHESS-VEC         -> hvp(..., symmetric=False)
+  Alg. 8  SC-HESS-VEC       -> hvp(..., symmetric=True)
+  Alg. 9  L0-HESS-VEC       -> batched_hvp(..., level="L0")
+  Alg. 10 L1-HESS-VEC       -> batched_hvp(..., level="L1")
+  Fig. 2  L2 CUDA kernel    -> batched_hvp(..., level="L2") and
+                               kernels/chess_hvp (Pallas)
+
+The GPU thread grid becomes vmap axes (DESIGN.md §3): on TPU, "a thread per
+(instance,row,chunk)" is a batched program over those axes, and XLA/Mosaic
+vectorize the trailing chunk axis onto VPU lanes.
+
+All chunk enumerations are static (numpy at trace time), so jit caches one
+executable per (n, csize, symmetric) signature -- the analogue of the paper's
+per-csize template instantiation.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hdual import HDual, seed_point
+
+__all__ = [
+    "eval_chunk", "hessian", "hvp", "gradient", "batched_hvp", "batched_hessian",
+    "chunk_pairs", "num_chunk_evals", "optimal_csize",
+]
+
+
+# ---------------------------------------------------------------------------
+# chunk enumeration (static)
+# ---------------------------------------------------------------------------
+
+def _nchunk(n: int, csize: int) -> int:
+    return -(-n // csize)  # ceil; the paper assumes csize | n, we allow padding
+
+
+def chunk_pairs(n: int, csize: int, symmetric: bool) -> np.ndarray:
+    """All (row i, chunk start) pairs to evaluate, as a (P, 2) int array.
+
+    symmetric=True enumerates only chunks at-or-right-of the diagonal chunk
+    (paper Alg. 6 line 4: startchunk = i / csize), giving
+    P = n*(n/csize + 1)/2 instead of n^2/csize.
+    """
+    nc = _nchunk(n, csize)
+    if symmetric:
+        pairs = [(i, c * csize) for i in range(n) for c in range(i // csize, nc)]
+    else:
+        pairs = [(i, c * csize) for i in range(n) for c in range(nc)]
+    return np.asarray(pairs, dtype=np.int32)
+
+
+def num_chunk_evals(n: int, csize: int, symmetric: bool) -> int:
+    return len(chunk_pairs(n, csize, symmetric))
+
+
+def optimal_csize(n: int) -> int:
+    """Paper §5: scalar multiplications of SCHUNK-HESS are minimized at
+    csize = sqrt(n/2); return the nearest power of two that divides n."""
+    target = math.sqrt(n / 2.0)
+    best, bestd = 1, abs(1 - target)
+    c = 1
+    while c <= n:
+        if n % c == 0 and abs(c - target) < bestd:
+            best, bestd = c, abs(c - target)
+        c *= 2
+    return best
+
+
+# ---------------------------------------------------------------------------
+# single chunk evaluation
+# ---------------------------------------------------------------------------
+
+def eval_chunk(f, a, i, cstart, csize: int):
+    """Evaluate one hDual pass: returns the output HDual whose ``dij`` is the
+    csize-wide chunk ``H[i, cstart:cstart+csize]`` (paper Alg. 5 lines 5-10)."""
+    y = seed_point(a, i, cstart, csize)
+    out = f(y)
+    if not isinstance(out, HDual):
+        raise TypeError("CHESSFAD target function must return an HDual scalar; "
+                        "write it against repro.core.hmath ops")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# full Hessian (Alg. 5 / Alg. 6)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnums=(0, 2, 3))
+def hessian(f, a, csize: int = 1, symmetric: bool = True):
+    """Dense Hessian of scalar ``f`` at ``a`` (shape (n,)) via chunked
+    forward-mode hDual evaluation.
+
+    L1 x L2 parallelism: a single vmap over the flat (row, chunk) pair list --
+    every Hessian chunk is an independent program instance, exactly the
+    paper's "rows are independent; chunks within a row are independent".
+    """
+    a = jnp.asarray(a)
+    n = a.shape[-1]
+    pairs = chunk_pairs(n, csize, symmetric)
+    rows = jnp.asarray(pairs[:, 0])
+    starts = jnp.asarray(pairs[:, 1])
+
+    chunks = jax.vmap(lambda i, c: eval_chunk(f, a, i, c, csize).dij)(rows, starts)
+    # scatter chunks into the dense matrix
+    cols = starts[:, None] + jnp.arange(csize)[None, :]          # (P, c)
+    valid = cols < n                                              # ragged tail guard
+    cols = jnp.minimum(cols, n - 1)
+    rr = jnp.broadcast_to(rows[:, None], cols.shape)
+    H = jnp.zeros((n, n), a.dtype)
+    H = H.at[rr, cols].add(jnp.where(valid, chunks, 0.0))
+    if symmetric:
+        # mirror strictly-upper chunk region (paper Alg. 6 lines 14-18).
+        block = (rows // csize)[:, None]
+        upper = (cols // csize > block) & valid
+        H = H.at[cols, rr].add(jnp.where(upper, chunks, 0.0))
+    return H
+
+
+# ---------------------------------------------------------------------------
+# gradient (free byproduct: dj slots hold first derivatives)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnums=(0, 2))
+def gradient(f, a, csize: int = 8):
+    """Forward-mode gradient reusing the hDual machinery: one row (i=0),
+    n/csize chunk sweeps; reads the ``dj`` slots (the paper notes the Jacobian
+    comes out while computing the Hessian)."""
+    a = jnp.asarray(a)
+    n = a.shape[-1]
+    nc = _nchunk(n, csize)
+    starts = jnp.asarray(np.arange(nc, dtype=np.int32) * csize)
+    djs = jax.vmap(lambda c: eval_chunk(f, a, 0, c, csize).dj)(starts)  # (nc, c)
+    g = djs.reshape(-1)[:n]
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Hessian-vector product (Alg. 7 / Alg. 8)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnums=(0, 3, 4))
+def hvp(f, a, v, csize: int = 1, symmetric: bool = True):
+    """r = H(a) @ v without materializing H.
+
+    Chunks are computed, dotted against v, and discarded (paper §3.3). With
+    symmetric=True the below-diagonal chunks are never evaluated; each
+    strictly-above chunk element H[i,j] also contributes H[i,j]*v[i] to r[j]
+    (Alg. 8 lines 12-15).
+    """
+    a = jnp.asarray(a)
+    v = jnp.asarray(v)
+    n = a.shape[-1]
+    pairs = chunk_pairs(n, csize, symmetric)
+    rows = jnp.asarray(pairs[:, 0])
+    starts = jnp.asarray(pairs[:, 1])
+
+    def one(i, cstart):
+        return eval_chunk(f, a, i, cstart, csize).dij    # (c,)
+
+    chunks = jax.vmap(one)(rows, starts)                  # (P, c)
+    cols = starts[:, None] + jnp.arange(csize)[None, :]   # (P, c)
+    valid = cols < n
+    cols_c = jnp.minimum(cols, n - 1)
+    contrib = jnp.where(valid, chunks * v[cols_c], 0.0)   # H[i,j] * v[j]
+    r = jnp.zeros((n,), a.dtype).at[rows].add(contrib.sum(-1))
+    if symmetric:
+        block = (rows // csize)[:, None]
+        upper = (cols // csize > block) & valid
+        sym_contrib = jnp.where(upper, chunks * v[rows][:, None], 0.0)
+        r = r.at[cols_c.reshape(-1)].add(sym_contrib.reshape(-1))
+    return r
+
+
+# ---------------------------------------------------------------------------
+# batched instances: the paper's L0 / L1 / L2 GPU schedules (Alg. 9/10, Fig 2)
+# ---------------------------------------------------------------------------
+
+def batched_hvp(f, A, V, csize: int = 1, level: str = "L2",
+                symmetric: bool = False):
+    """Hessian-vector products for m instances: A, V are (m, n).
+
+    level="L0": one program per instance; rows+chunks sequential (lax.scan)
+                inside -- mirrors Alg. 9's thread-per-instance.
+    level="L1": rows also batched (vmap) -- Alg. 10's thread-per-(instance,row).
+    level="L2": rows x chunks fully batched + segment reduction -- Fig. 2.
+
+    On TPU the batched axes become one flat parallel dimension; the benchmark
+    suite (benchmarks/gpu_levels.py) reproduces the paper's Figs. 10-12 by
+    timing the three schedules.
+    """
+    if level not in ("L0", "L1", "L2"):
+        raise ValueError(f"unknown level {level!r}")
+    A = jnp.asarray(A)
+    V = jnp.asarray(V)
+    n = A.shape[-1]
+    nc = _nchunk(n, csize)
+    starts_np = np.arange(nc, dtype=np.int32) * csize
+
+    if level == "L2":
+        fn = partial(hvp, f, csize=csize, symmetric=symmetric)
+        return jax.vmap(lambda a, v: fn(a, v))(A, V)
+
+    def row_hvp(a, v, i):
+        """Sequential chunk sweep for row i (Alg. 9 inner loop)."""
+        def body(res, cstart):
+            dij = eval_chunk(f, a, i, cstart, csize).dij
+            cols = cstart + jnp.arange(csize)
+            ok = cols < n
+            res = res + jnp.sum(jnp.where(ok, dij * v[jnp.minimum(cols, n - 1)], 0.0))
+            return res, None
+
+        res, _ = jax.lax.scan(body, jnp.zeros((), a.dtype),
+                              jnp.asarray(starts_np))
+        return res
+
+    if level == "L1":
+        def inst(a, v):
+            return jax.vmap(lambda i: row_hvp(a, v, i))(jnp.arange(n))
+        return jax.vmap(inst)(A, V)
+
+    # L0: rows sequential too
+    def inst(a, v):
+        def body(_, i):
+            return None, row_hvp(a, v, i)
+        _, out = jax.lax.scan(body, None, jnp.arange(n))
+        return out
+
+    return jax.vmap(inst)(A, V)
+
+
+def batched_hessian(f, A, csize: int = 1, symmetric: bool = True):
+    """Dense Hessians for m instances (m, n) -> (m, n, n)."""
+    return jax.vmap(lambda a: hessian(f, a, csize, symmetric))(jnp.asarray(A))

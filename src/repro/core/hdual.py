@@ -1,0 +1,274 @@
+"""hDual: the CHESSFAD second-order forward-mode dual number (paper §3-4).
+
+An ``HDual`` carries, for every program value ``u``:
+
+  val : u                                  -- the primal value
+  di  : du/dx_i                            -- tangent w.r.t. the Hessian *row*
+  dj  : du/dx_{j..j+c-1}    (chunk axis)   -- first-order chunk tangents
+  dij : d2u/dx_i dx_{j..j+c-1}             -- second-order chunk
+
+TPU adaptation (DESIGN.md §3): the paper stores ``v[2*csize+2]`` scalars per
+CUDA thread; here the chunk is a *trailing array axis* so every overloaded op
+is a vector op over the 128-lane VPU axis, and ``val``/``di``/``dj``/``dij``
+are jnp arrays. HDual is a registered pytree, so ``jit``/``vmap``/``grad``/
+``shard_map`` compose with it -- the JAX analogue of the paper's "header-based
+library: retype double -> hDual".
+
+Shapes: ``val`` and ``di`` share a shape ``S``; ``dj`` and ``dij`` have shape
+``S + (csize,)``. Binary ops broadcast ``S`` numpy-style (the chunk axis is
+always trailing and must agree).
+"""
+
+from __future__ import annotations
+
+import operator
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["HDual", "lift", "seed_point", "is_hdual"]
+
+
+def _chunk(x):
+    """Broadcast an ``S``-shaped array against the trailing chunk axis."""
+    return x[..., None]
+
+
+@jax.tree_util.register_pytree_node_class
+class HDual:
+    """CHESSFAD hDual<csize> (paper §4) with array components."""
+
+    __slots__ = ("val", "di", "dj", "dij")
+    # Make jnp.asarray & friends defer to our reflected operators.
+    __array_priority__ = 1000
+
+    def __init__(self, val, di, dj, dij):
+        self.val = val
+        self.di = di
+        self.dj = dj
+        self.dij = dij
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.val, self.di, self.dj, self.dij), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # -- metadata ----------------------------------------------------------
+    @property
+    def csize(self) -> int:
+        return self.dj.shape[-1]
+
+    @property
+    def shape(self):
+        return jnp.shape(self.val)
+
+    @property
+    def dtype(self):
+        return jnp.result_type(self.val)
+
+    def __repr__(self):
+        return (f"HDual(val={self.val!r}, di={self.di!r}, dj={self.dj!r}, "
+                f"dij={self.dij!r})")
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def constant(cls, x, csize, dtype=None):
+        x = jnp.asarray(x, dtype=dtype)
+        z = jnp.zeros_like(x)
+        zc = jnp.zeros(x.shape + (csize,), x.dtype)
+        return cls(x, z, zc, zc)
+
+    # -- arithmetic ----------------------------------------------------------
+    def _coerce(self, other):
+        """Return ``other`` as HDual or None if it is a plain constant."""
+        if isinstance(other, HDual):
+            return other
+        if isinstance(other, (int, float, np.ndarray, jnp.ndarray, np.number)):
+            return None  # constant fast path
+        return NotImplemented
+
+    def __add__(self, other):
+        o = self._coerce(other)
+        if o is NotImplemented:
+            return NotImplemented
+        if o is None:  # constant: only the value moves (paper's op+(double, hDual))
+            return HDual(self.val + other, self.di, self.dj, self.dij)
+        return HDual(self.val + o.val, self.di + o.di, self.dj + o.dj,
+                     self.dij + o.dij)
+
+    __radd__ = __add__
+
+    def __neg__(self):
+        return HDual(-self.val, -self.di, -self.dj, -self.dij)
+
+    def __sub__(self, other):
+        o = self._coerce(other)
+        if o is NotImplemented:
+            return NotImplemented
+        if o is None:
+            return HDual(self.val - other, self.di, self.dj, self.dij)
+        return HDual(self.val - o.val, self.di - o.di, self.dj - o.dj,
+                     self.dij - o.dij)
+
+    def __rsub__(self, other):
+        return (-self).__add__(other)
+
+    def __mul__(self, other):
+        o = self._coerce(other)
+        if o is NotImplemented:
+            return NotImplemented
+        if o is None:  # constant scale: all 2c+2 components scale (paper op*(hDual,double))
+            c = jnp.asarray(other)
+            return HDual(self.val * c, self.di * c, self.dj * _chunk(c),
+                         self.dij * _chunk(c))
+        u, v = self, o
+        # Leibniz to second order (paper §3.1):
+        #   (uv)_ij = u v_ij + u_i v_j + v_i u_j + v u_ij
+        val = u.val * v.val
+        di = u.val * v.di + v.val * u.di
+        dj = _chunk(u.val) * v.dj + _chunk(v.val) * u.dj
+        dij = (_chunk(u.val) * v.dij + _chunk(u.di) * v.dj
+               + _chunk(v.di) * u.dj + _chunk(v.val) * u.dij)
+        return HDual(val, di, dj, dij)
+
+    __rmul__ = __mul__
+
+    def _reciprocal(self):
+        # g(v)=1/v, g'=-1/v^2, g''=2/v^3
+        inv = 1.0 / self.val
+        return self.unary(inv, -inv * inv, 2.0 * inv * inv * inv)
+
+    def __truediv__(self, other):
+        o = self._coerce(other)
+        if o is NotImplemented:
+            return NotImplemented
+        if o is None:
+            return self * (1.0 / jnp.asarray(other))
+        return self * o._reciprocal()
+
+    def __rtruediv__(self, other):
+        return self._reciprocal() * other
+
+    def __pow__(self, p):
+        if isinstance(p, HDual):
+            # u**p = exp(p*log(u)) -- delegate to hmath at call sites; rare.
+            raise NotImplementedError("HDual**HDual: use hmath.exp(p*hmath.log(u))")
+        if isinstance(p, int) and p >= 0:
+            # Exact integer powers via repeated squaring keeps tests bitwise-stable
+            # for the paper's polynomial test functions.
+            if p == 0:
+                return HDual.constant(jnp.ones_like(self.val), self.csize)
+            result = None
+            base = self
+            e = p
+            while e:
+                if e & 1:
+                    result = base if result is None else result * base
+                e >>= 1
+                if e:
+                    base = base * base
+            return result
+        v = self.val
+        g = v ** p
+        dg = p * v ** (p - 1)
+        d2g = p * (p - 1) * v ** (p - 2)
+        return self.unary(g, dg, d2g)
+
+    def unary(self, g, dg, d2g):
+        """Chain rule for g(u): (paper §3.1 sin-rule generalized)
+
+          g_i  = g'(u) u_i
+          g_ij = g'(u) u_ij + g''(u) u_i u_j
+        """
+        return HDual(
+            g,
+            dg * self.di,
+            _chunk(dg) * self.dj,
+            _chunk(dg) * self.dij + _chunk(d2g * self.di) * self.dj,
+        )
+
+    # -- comparisons (on the primal value, like the paper's <,>,<= overloads) --
+    def __lt__(self, other):
+        return self.val < _val(other)
+
+    def __le__(self, other):
+        return self.val <= _val(other)
+
+    def __gt__(self, other):
+        return self.val > _val(other)
+
+    def __ge__(self, other):
+        return self.val >= _val(other)
+
+    # -- structural ops ------------------------------------------------------
+    def __getitem__(self, idx):
+        # Index applies to the value shape S; the chunk axis is trailing and
+        # untouched. Only basic (int/slice/tuple-of-those) indexing.
+        return HDual(self.val[idx], self.di[idx], self.dj[idx], self.dij[idx])
+
+    def reshape(self, *shape):
+        if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
+            shape = tuple(shape[0])
+        return HDual(self.val.reshape(shape), self.di.reshape(shape),
+                     self.dj.reshape(shape + (self.csize,)),
+                     self.dij.reshape(shape + (self.csize,)))
+
+    def sum(self, axis=None):
+        ax = _norm_axis(axis, jnp.ndim(self.val))
+        return HDual(jnp.sum(self.val, ax), jnp.sum(self.di, ax),
+                     jnp.sum(self.dj, ax), jnp.sum(self.dij, ax))
+
+    def astype(self, dtype):
+        return HDual(self.val.astype(dtype), self.di.astype(dtype),
+                     self.dj.astype(dtype), self.dij.astype(dtype))
+
+
+def _val(x):
+    return x.val if isinstance(x, HDual) else x
+
+
+def _norm_axis(axis, ndim):
+    """Normalize value-shape axes so they never touch the trailing chunk axis."""
+    if axis is None:
+        return tuple(range(ndim))
+    if isinstance(axis, int):
+        axis = (axis,)
+    return tuple(a % ndim for a in axis)
+
+
+def is_hdual(x) -> bool:
+    return isinstance(x, HDual)
+
+
+def lift(x, csize, dtype=None) -> HDual:
+    """Lift a constant array into an HDual with zero derivatives."""
+    return HDual.constant(x, csize, dtype)
+
+
+def seed_point(a, i, cstart, csize) -> HDual:
+    """CHUNK-INIT (paper Alg. 4): seed the n input variables.
+
+    a      : (..., n) evaluation point
+    i      : Hessian row index (scalar, may be traced)
+    cstart : chunk start column (scalar, may be traced)
+
+    Returns the HDual vector y with
+      y.di[k]    = [k == i]
+      y.dj[k, l] = [k == cstart + l]
+    """
+    a = jnp.asarray(a)
+    n = a.shape[-1]
+    dt = a.dtype
+    k = jnp.arange(n)
+    di = (k == i).astype(dt)
+    di = jnp.broadcast_to(di, a.shape)
+    cols = cstart + jnp.arange(csize)
+    dj = (k[:, None] == cols[None, :]).astype(dt)
+    dj = jnp.broadcast_to(dj, a.shape + (csize,))
+    dij = jnp.zeros(a.shape + (csize,), dt)
+    return HDual(a, di, dj, dij)

@@ -1,0 +1,85 @@
+"""The paper's evaluation functions (§7): Rosenbrock, Ackley, Fletcher-Powell.
+
+Each is written once against ``repro.core.hmath`` and therefore runs on plain
+arrays *and* on HDuals -- the library-usage pattern the paper advertises
+("replace double with hDual in a templated function").
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import hmath as hm
+from .hdual import HDual
+
+__all__ = ["rosenbrock", "ackley", "fletcher_powell", "make_fletcher_powell",
+           "FUNCTIONS", "sample_point"]
+
+
+def rosenbrock(x):
+    """sum_{k<n-1} 100 (x_{k+1} - x_k^2)^2 + (1 - x_k)^2."""
+    xk = x[:-1]
+    xk1 = x[1:]
+    t1 = xk1 - xk * xk
+    t2 = 1.0 - xk
+    return (t1 * t1 * 100.0 + t2 * t2).sum(0)
+
+
+def ackley(x):
+    """-20 exp(-0.2 sqrt(mean x^2)) - exp(mean cos(2 pi x)) + 20 + e."""
+    n = x.shape[0]
+    s1 = (x * x).sum(0) * (1.0 / n)
+    s2 = hm.cos(x * (2.0 * math.pi)).sum(0) * (1.0 / n)
+    return (hm.exp(hm.sqrt(s1) * -0.2) * -20.0) - hm.exp(s2) + (20.0 + math.e)
+
+
+_FP_CACHE: dict = {}
+
+
+def _fp_coeffs(n: int, seed: int = 1963):
+    """Fletcher & Powell (1963) trigonometric test function coefficients:
+    integer a,b in [-100,100], alpha in [-pi,pi]. Deterministic per n."""
+    key = (n, seed)
+    if key not in _FP_CACHE:
+        rng = np.random.RandomState(seed + n)
+        A = rng.randint(-100, 101, size=(n, n)).astype(np.float32)
+        B = rng.randint(-100, 101, size=(n, n)).astype(np.float32)
+        alpha = rng.uniform(-np.pi, np.pi, size=(n,)).astype(np.float32)
+        E = (A @ np.sin(alpha) + B @ np.cos(alpha)).astype(np.float32)
+        # cache NUMPY (jnp arrays created inside a jit trace would leak
+        # tracers through the cache)
+        _FP_CACHE[key] = (A, B, E)
+    return _FP_CACHE[key]
+
+
+def make_fletcher_powell(n: int, seed: int = 1963):
+    A, B, E = _fp_coeffs(n, seed)
+
+    def fletcher_powell(x):
+        s = hm.matvec_const(A, hm.sin(x))
+        c = hm.matvec_const(B, hm.cos(x))
+        r = (s + c) - E
+        return (r * r).sum(0)
+
+    return fletcher_powell
+
+
+def fletcher_powell(x):
+    """Convenience entry using the shape of x to pick coefficients."""
+    n = x.shape[0] if not isinstance(x, HDual) else x.val.shape[0]
+    return make_fletcher_powell(int(n))(x)
+
+
+FUNCTIONS = {
+    "rosenbrock": lambda n: rosenbrock,
+    "ackley": lambda n: ackley,
+    "fletcher_powell": make_fletcher_powell,
+}
+
+
+def sample_point(n: int, seed: int = 0, dtype=jnp.float32):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.uniform(-2.0, 2.0, size=(n,)), dtype=dtype)

@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticTokens, global_batch_at
+
+__all__ = ["SyntheticTokens", "global_batch_at"]

@@ -1,0 +1,75 @@
+"""Deterministic, step-keyed synthetic token pipeline.
+
+Every batch is a pure function of (seed, step, global position), so a
+restart at step k reproduces the exact token stream with NO pipeline state
+to checkpoint -- the data side of fault tolerance (DESIGN.md §6). On a real
+multi-host cluster each host materializes only its addressable shards via
+``jax.make_array_from_callback``; on one host the same code path produces a
+fully-sharded global array.
+
+The token distribution is a Zipf-like categorical (temperature-flattened),
+which keeps the xent landscape non-degenerate for optimizer tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SyntheticTokens", "global_batch_at"]
+
+
+@dataclass
+class SyntheticTokens:
+    vocab_size: int
+    batch: int
+    seq: int
+    seed: int = 0
+    zipf_a: float = 1.2
+
+    def _tokens_np(self, step: int, rows: np.ndarray) -> np.ndarray:
+        """Rows of the global batch (deterministic per (seed, step, row))."""
+        out = np.empty((len(rows), self.seq), np.int32)
+        for i, r in enumerate(rows):
+            rng = np.random.RandomState(
+                (self.seed * 1_000_003 + step * 997 + int(r)) % (2 ** 31))
+            z = rng.zipf(self.zipf_a, size=self.seq).astype(np.int64)
+            out[i] = (z % self.vocab_size).astype(np.int32)
+        return out
+
+    def batch_at(self, step: int, sharding=None):
+        """Global (batch, seq) int32 array, sharded if a sharding is given."""
+        if sharding is None:
+            return jnp.asarray(self._tokens_np(step, np.arange(self.batch)))
+        shape = (self.batch, self.seq)
+
+        def cb(index):
+            rows = np.arange(*index[0].indices(self.batch))
+            data = self._tokens_np(step, rows)
+            return data[:, index[1]]
+
+        return jax.make_array_from_callback(shape, sharding, cb)
+
+
+def global_batch_at(cfg, shape, step: int, mesh=None, sharding=None,
+                    seed: int = 0):
+    """Batch dict matching model.input_specs(cfg, shape) for train shapes."""
+    ds = SyntheticTokens(cfg.vocab_size, shape.global_batch, shape.seq_len,
+                         seed)
+    toks = ds.batch_at(step, sharding)
+    batch = {"tokens": toks}
+    if cfg.frontend == "vlm":
+        batch["tokens"] = toks[:, : shape.seq_len - cfg.frontend_len]
+        rng = np.random.RandomState(seed + step)
+        batch["patches"] = jnp.asarray(
+            rng.randn(shape.global_batch, cfg.frontend_len,
+                      cfg.d_model).astype(np.float32))
+    elif cfg.frontend == "audio":
+        rng = np.random.RandomState(seed + step)
+        batch["frames"] = jnp.asarray(
+            rng.randn(shape.global_batch, cfg.frontend_len,
+                      cfg.d_model).astype(np.float32))
+    return batch

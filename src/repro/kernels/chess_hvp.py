@@ -1,0 +1,107 @@
+"""chess_hvp: the paper's L2 CUDA kernel (Fig. 2), TPU-adapted in Pallas.
+
+Paper (A100):  one CUDA thread per (instance, row, chunk); hDual components
+               live in registers; per-row dot-product partials reduced via
+               shared memory + __syncthreads().
+Here (TPU):    grid = (instance-blocks, rows, chunks). Each grid cell holds
+               an hDual VECTOR of the whole n-variable input in VMEM with a
+               trailing csize chunk axis (lane-vectorized on the VPU) and a
+               block of instances on the sublane axis. The per-row dot
+               product accumulates across the chunk grid dimension directly
+               into the output block (out block index is chunk-independent,
+               so Mosaic keeps it resident in VMEM -- the shared-memory
+               reduction becomes a VMEM accumulator).
+
+VMEM footprint per grid cell = n * blk_m * (2*csize + 2) * 4B -- the paper's
+csize <-> fast-memory dial, verbatim, with VMEM playing the register/L1
+role (DESIGN.md §3).
+
+The kernel is generic over any ``f`` written against repro.core.hmath /
+HDual ops (trace-time polymorphism = the paper's template instantiation);
+constant coefficient arrays (Fletcher-Powell's A, B, E) enter as extra refs
+broadcast to every grid cell.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hdual import HDual
+
+__all__ = ["chess_hvp_pallas"]
+
+
+def _kernel(a_ref, v_ref, *rest, f, n, csize, blk_m, out_dtype):
+    consts = rest[:-1]
+    out_ref = rest[-1]
+    i = pl.program_id(1)                       # Hessian row
+    c = pl.program_id(2)                       # chunk index
+    cstart = c * csize
+
+    a = a_ref[...].astype(jnp.float32)         # (blk_m, n)
+    at = a.T                                   # (n, blk_m) variables-major
+
+    k2 = jax.lax.broadcasted_iota(jnp.int32, (n, blk_m), 0)
+    di = (k2 == i).astype(jnp.float32)
+    k3 = jax.lax.broadcasted_iota(jnp.int32, (n, blk_m, csize), 0)
+    l3 = jax.lax.broadcasted_iota(jnp.int32, (n, blk_m, csize), 2)
+    dj = (k3 == cstart + l3).astype(jnp.float32)
+    dij = jnp.zeros((n, blk_m, csize), jnp.float32)
+
+    y = HDual(at, di, dj, dij)
+    r = f(y, *[cr[...] for cr in consts])      # HDual: val (blk_m,), dij (blk_m, csize)
+
+    v = v_ref[...].astype(jnp.float32)         # (blk_m, n)
+    cols = cstart + jax.lax.broadcasted_iota(jnp.int32, (blk_m, csize), 1)
+    vc = jnp.take_along_axis(v, jnp.minimum(cols, n - 1), axis=1)
+    contrib = jnp.sum(jnp.where(cols < n, r.dij * vc, 0.0), axis=1)
+
+    @pl.when(c == 0)
+    def _init():
+        out_ref[:, 0] = contrib.astype(out_dtype)
+
+    @pl.when(c > 0)
+    def _acc():
+        out_ref[:, 0] = out_ref[:, 0] + contrib.astype(out_dtype)
+
+
+def chess_hvp_pallas(f: Callable, A, V, csize: int, *,
+                     consts: Sequence = (), blk_m: int = 8,
+                     interpret: bool = True):
+    """Batched HVP out[m] = H_f(A[m]) @ V[m] via the L2 grid schedule.
+
+    A, V: (m, n). Returns (m, n). n % csize == 0 (paper's assumption);
+    m % blk_m == 0.
+    """
+    m, n = A.shape
+    assert V.shape == (m, n)
+    assert n % csize == 0, (n, csize)
+    assert m % blk_m == 0, (m, blk_m)
+    nchunk = n // csize
+    grid = (m // blk_m, n, nchunk)
+
+    in_specs = [
+        pl.BlockSpec((blk_m, n), lambda mi, i, c: (mi, 0)),   # A
+        pl.BlockSpec((blk_m, n), lambda mi, i, c: (mi, 0)),   # V
+    ]
+    for cst in consts:
+        in_specs.append(
+            pl.BlockSpec(cst.shape,
+                         lambda mi, i, c, _nd=cst.ndim: (0,) * _nd))
+    out_spec = pl.BlockSpec((blk_m, 1), lambda mi, i, c: (mi, i))
+
+    kernel = functools.partial(_kernel, f=f, n=n, csize=csize, blk_m=blk_m,
+                               out_dtype=A.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), A.dtype),
+        interpret=interpret,
+    )(A, V, *consts)

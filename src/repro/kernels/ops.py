@@ -1,0 +1,89 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the kernels are TPU-target; CPU runs
+them through the Pallas interpreter for correctness), and to False on TPU
+where Mosaic compiles them for real.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import testfns
+from repro.kernels.chess_hvp import chess_hvp_pallas
+from repro.kernels.hdual_linear import hdual_linear_pallas
+
+__all__ = ["chess_hvp", "hdual_linear", "hdual_linear_apply",
+           "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _fn_and_consts(function: str, n: int):
+    if function == "fletcher_powell":
+        A, B, E = testfns._fp_coeffs(n)
+
+        def f(y, A, B, E):
+            import repro.core.hmath as hm
+            s = hm.matvec_const(A, hm.sin(y))
+            c = hm.matvec_const(B, hm.cos(y))
+            # E broadcasts over any trailing instance axes of the value
+            # shape ((n,) on CPU oracle, (n, blk_m) inside the kernel)
+            Eb = E.reshape(E.shape + (1,) * (jnp.ndim(s.val) - 1))
+            r = (s + c) - Eb
+            return (r * r).sum(0)
+
+        return f, (A, B, E)
+    base = testfns.FUNCTIONS[function](n)
+    return (lambda y: base(y)), ()
+
+
+@partial(jax.jit, static_argnames=("function", "csize", "blk_m", "interpret"))
+def chess_hvp(A, V, *, function: str = "rosenbrock", csize: int = 4,
+              blk_m: int = 8, interpret: bool | None = None):
+    """Batched HVP on one of the paper's test-function families.
+
+    A, V: (m, n) -> (m, n)."""
+    if interpret is None:
+        interpret = default_interpret()
+    n = A.shape[-1]
+    f, consts = _fn_and_consts(function, n)
+    return chess_hvp_pallas(f, A, V, csize, consts=consts, blk_m=blk_m,
+                            interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("bt", "bo", "bk", "interpret"))
+def hdual_linear(x, w, *, bt: int = 128, bo: int = 128, bk: int = 128,
+                 interpret: bool | None = None):
+    """Fused hDual component matmul: x (K2, T, din) @ w (din, dout)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return hdual_linear_pallas(x, w, bt=bt, bo=bo, bk=bk,
+                               interpret=interpret)
+
+
+def hdual_linear_apply(hd, w, **kw):
+    """Apply the fused kernel to an HDual whose value shape is (din,) or
+    (T, din): stacks [val, di, dj..., dij...] on a leading component axis,
+    runs ONE kernel call (every component contracts the same W tiles),
+    unstacks. Equivalent to hmath.matvec_const(w.T, hd) for vectors."""
+    from repro.core.hdual import HDual
+
+    c = hd.csize
+    vec = hd.val.ndim == 1
+    comps = jnp.concatenate([
+        hd.val[None], hd.di[None],
+        jnp.moveaxis(hd.dj, -1, 0), jnp.moveaxis(hd.dij, -1, 0)], axis=0)
+    if vec:
+        comps = comps[:, None, :]                    # (2c+2, 1, din)
+    y = hdual_linear(comps, w, **kw)                 # (2c+2, T, dout)
+    if vec:
+        y = y[:, 0, :]
+    return HDual(y[0], y[1],
+                 jnp.moveaxis(y[2:2 + c], 0, -1),
+                 jnp.moveaxis(y[2 + c:], 0, -1))

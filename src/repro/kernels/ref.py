@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert_allclose vs these).
+
+chess_hvp_ref     -- batched HVP via the vmapped hDual engine (core.api),
+                     itself validated against jax.hessian in tests/.
+hdual_linear_ref  -- one einsum per hDual component (the unfused baseline
+                     the kernel's shared-W-tile trick beats on HBM traffic).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import hvp
+
+__all__ = ["chess_hvp_ref", "hdual_linear_ref"]
+
+
+def chess_hvp_ref(f, A, V, csize: int, consts=()):
+    fn = (lambda y: f(y, *consts)) if consts else f
+    return jax.vmap(lambda a, v: hvp(fn, a, v, csize=csize,
+                                     symmetric=False))(A, V)
+
+
+def hdual_linear_ref(x, w):
+    """x (K2, T, din), w (din, dout) -> (K2, T, dout)."""
+    return jnp.einsum("ktd,df->ktf", x,
+                      w.astype(x.dtype)).astype(x.dtype)

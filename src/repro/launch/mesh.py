@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state -- device count is locked at first jax init, and
+only launch/dryrun.py is allowed to fake 512 host devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "SINGLE_POD", "MULTI_POD"]
+
+SINGLE_POD = {"shape": (16, 16), "axes": ("data", "model")}
+MULTI_POD = {"shape": (2, 16, 16), "axes": ("pod", "data", "model")}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod ("data","model"); multi-pod adds a leading
+    2-wide "pod" axis (512 chips). The "pod" axis is outer data parallelism
+    over DCN; "data" is FSDP/DP over ICI; "model" is TP."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over however many real devices exist (tests/examples)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,97 @@
+"""Roofline report: reads artifacts/dryrun/*.json and renders the per-cell
+three-term table (EXPERIMENTS.md §Roofline).
+
+  compute    = HLO_FLOPs_per_device / 197 TFLOP/s
+  memory     = HLO_bytes_per_device / 819 GB/s
+  collective = wire_bytes_per_device / 50 GB/s (ICI link)
+
+Also reports MODEL_FLOPS/HLO_FLOPs (useful-compute ratio; catches remat and
+redundancy waste) and the dominant term per cell.
+
+Usage: python -m repro.launch.roofline [--dir artifacts/dryrun] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+__all__ = ["load_records", "render_table"]
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "artifacts", "dryrun")
+
+
+def load_records(d: str = DEFAULT_DIR) -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _fmt_t(x):
+    if x >= 1.0:
+        return f"{x:7.2f}s "
+    if x >= 1e-3:
+        return f"{x * 1e3:7.2f}ms"
+    return f"{x * 1e6:7.2f}us"
+
+
+def render_table(recs: list[dict], md: bool = False) -> str:
+    rows = []
+    hdr = ["cell", "status", "t_compute", "t_memory", "t_collective",
+           "bound", "useful_ratio", "hbm_GiB"]
+    for r in recs:
+        if r["status"] == "ok":
+            t = r["roofline"]
+            mem = r.get("memory", {})
+            hbm = (mem.get("argument_size_in_bytes", 0)
+                   + mem.get("temp_size_in_bytes", 0)
+                   + mem.get("output_size_in_bytes", 0)
+                   - mem.get("alias_size_in_bytes", 0)) / 2 ** 30
+            ur = r.get("useful_flop_ratio")
+            rows.append([r["cell"], "ok", _fmt_t(t["compute_s"]),
+                         _fmt_t(t["memory_s"]), _fmt_t(t["collective_s"]),
+                         t["bound"],
+                         f"{ur:.2f}" if ur is not None else "-",
+                         f"{hbm:.2f}"])
+        elif r["status"] == "skipped":
+            rows.append([r["cell"], "SKIP", "-", "-", "-", "-", "-", "-"])
+        else:
+            rows.append([r["cell"], "ERROR", "-", "-", "-", "-", "-", "-"])
+    widths = [max(len(str(row[i])) for row in rows + [hdr])
+              for i in range(len(hdr))]
+
+    def line(row):
+        cells = [str(c).ljust(w) for c, w in zip(row, widths)]
+        return ("| " + " | ".join(cells) + " |") if md else "  ".join(cells)
+
+    out = [line(hdr)]
+    if md:
+        out.append("|" + "|".join("-" * (w + 2) for w in widths) + "|")
+    out += [line(r) for r in rows]
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=DEFAULT_DIR)
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    print(render_table(recs, args.md))
+    ok = [r for r in recs if r["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r.get("useful_flop_ratio") or 1e9)
+        coll = max(ok, key=lambda r: r["roofline"]["collective_s"]
+                   / max(r["roofline"]["step_time_lower_bound_s"], 1e-30))
+        print(f"\nworst useful-FLOP ratio : {worst['cell']}"
+              f" ({worst.get('useful_flop_ratio'):.3f})")
+        print(f"most collective-bound   : {coll['cell']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Training driver.
+
+  python -m repro.launch.train --arch minitron-4b [--reduced] \
+      --steps 200 --batch 8 --seq 256 --optimizer sophia_h \
+      --ckpt-dir /tmp/ckpt [--mesh dxm] [--resume]
+
+On a real cluster this binary runs per-host under the launch_scripts/
+wrappers (jax.distributed.initialize is called when COORDINATOR_ADDRESS is
+set); on one host it runs the same code on a 1x1 mesh (or whatever --mesh
+says with fake devices for debugging).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.data import SyntheticTokens
+from repro.launch.mesh import make_test_mesh
+from repro.models.model import make_batch
+from repro.models.params import init_params, param_specs
+from repro.optim import OPTIMIZERS
+from repro.optim.schedule import warmup_cosine
+from repro.parallel.sharding import batch_spec
+from repro.training import (TrainLoop, TrainLoopConfig, TrainState,
+                            make_train_step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=list(OPTIMIZERS))
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data-mesh", type=int, default=0,
+                    help="data axis size (0 = all devices)")
+    args = ap.parse_args()
+
+    if os.environ.get("COORDINATOR_ADDRESS"):
+        jax.distributed.initialize()          # multi-host entry
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    n_dev = len(jax.devices())
+    dsize = args.data_mesh or n_dev
+    mesh = make_test_mesh((dsize, n_dev // dsize), ("data", "model"))
+
+    opt = OPTIMIZERS[args.optimizer](
+        warmup_cosine(args.lr, max(args.steps // 20, 1), args.steps))
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    pspecs = param_specs(cfg, mesh)
+    params = jax.tree.map(
+        lambda p, s: jax.device_put(p, NamedSharding(mesh, s)), params,
+        pspecs)
+    state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32),
+                       jax.random.PRNGKey(args.seed + 1))
+
+    step_fn = make_train_step(cfg, mesh, opt)
+    ds = SyntheticTokens(cfg.vocab_size, args.batch, args.seq, args.seed)
+    bsharding = NamedSharding(mesh, batch_spec(mesh))
+
+    def batch_fn(step):
+        if cfg.frontend:
+            return make_batch(cfg, args.batch, args.seq,
+                              jax.random.PRNGKey(step))
+        return {"tokens": ds.batch_at(step, bsharding)}
+
+    loop = TrainLoop(
+        TrainLoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                        ckpt_every=args.ckpt_every,
+                        log_path=os.path.join(args.ckpt_dir,
+                                              "metrics.jsonl")),
+        step_fn, batch_fn, state)
+    result = loop.run()
+    last = [m for m in result["metrics"] if "loss" in m][-5:]
+    print(f"finished at step {result['final_step']}; last losses: "
+          + ", ".join(f"{m['loss']:.4f}" for m in last))
+    if result["stragglers"]:
+        print(f"stragglers detected: {result['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

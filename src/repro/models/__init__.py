@@ -1,0 +1,1 @@
+"""LM substrate: attention/MoE/SSM/hybrid/enc-dec stacks, params, model API."""

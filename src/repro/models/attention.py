@@ -1,0 +1,214 @@
+"""Attention: GQA + RoPE + sliding window, flash-style chunked softmax,
+and single-token decode against a position-tagged KV cache.
+
+Layouts (logical axes):
+  q        : (batch, seq, heads, head_dim)
+  k, v     : (batch, seq, kv_heads, head_dim)
+  cache k/v: (batch, cache_len, kv_heads, head_dim)
+  cache pos: (batch, cache_len) int32, -1 = empty slot
+
+GQA is computed grouped -- q reshaped to (B, S, KV, G, D) -- so no KV
+repetition is materialized. Softmax runs in fp32. Long sequences use an
+online-softmax scan over KV chunks (`attn_chunk`), which bounds the live
+score tensor to (B, KV, G, Sq, chunk) -- the pure-XLA flash equivalent, and
+the reason prefill_32k fits HBM without a fused kernel.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["apply_rope", "attention", "decode_attention", "sliding_window_mask"]
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions, head_dim, theta):
+    """positions (...,) -> cos/sin (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (B, S, H, D), positions: (B, S) or (S,). theta<=0 disables (whisper)."""
+    if theta is None or theta <= 0:
+        return x
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    cos, sin = _rope_angles(positions, x.shape[-1], theta)  # (B, S, D/2)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# masking
+# ---------------------------------------------------------------------------
+
+def sliding_window_mask(q_pos, kv_pos, causal, window):
+    """(..., Sq, 1) x (..., 1, Skv) position grids -> bool keep-mask."""
+    m = jnp.ones(jnp.broadcast_shapes(q_pos.shape, kv_pos.shape), bool)
+    if causal:
+        m &= kv_pos <= q_pos
+    if window is not None:
+        m &= (q_pos - kv_pos) < window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# core attention
+# ---------------------------------------------------------------------------
+
+def _scores(q, k, scale):
+    """q (B,Sq,KV,G,D) x k (B,Skv,KV,D) -> (B,KV,G,Sq,Skv) fp32."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _pv(p, v):
+    """p (B,KV,G,Sq,Skv) x v (B,Skv,KV,D) -> (B,Sq,KV,G,D)."""
+    return jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+
+
+def _pick_chunk(S, target):
+    """Largest divisor of S that is <= target (S itself when S <= target)."""
+    if S <= target:
+        return S
+    c = target
+    while S % c:
+        c -= 1
+    return c
+
+
+def attention(q, k, v, *, causal=True, window: Optional[int] = None,
+              q_positions=None, kv_positions=None, chunk: int = 2048,
+              softcap: Optional[float] = None, q_chunk: int = 1024,
+              mesh=None):
+    """Flash-style attention, pure XLA: online softmax tiled over BOTH the
+    query axis (q_chunk) and the KV axis (chunk), so the live score tensor
+    is bounded by (B, H, q_chunk, chunk) regardless of sequence length --
+    this is what keeps prefill_32k / train_4k inside HBM without a fused
+    kernel. Falls back to one un-tiled einsum when both sides fit.
+
+    ``mesh``: when given, score/accumulator tensors INSIDE the tiling loops
+    are sharding-constrained on their head axis -- GSPMD replicates
+    unannotated while-loop internals, which silently costs H/H_local x
+    score memory (EXPERIMENTS.md §Perf, deepseek iteration 2).
+
+    q (B,Sq,H,D), k/v (B,Skv,KV,D) -> (B,Sq,H,D).
+    """
+    from repro.parallel.sharding import constrain
+
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    # scores (B, KV, G, q, k): dim1 is full heads when G == 1 (repeat-kv)
+    kv_logical = "heads" if G == 1 else "kv_heads"
+
+    def cons(s_like):
+        return constrain(s_like, mesh, "batch", kv_logical, None, None,
+                         None)
+
+    scale = 1.0 / math.sqrt(D)
+    if q_positions is None:
+        q_positions = jnp.arange(Sq)[None, :] + (Skv - Sq)
+    if kv_positions is None:
+        kv_positions = jnp.arange(Skv)[None, :]
+    q_positions = jnp.broadcast_to(q_positions, (B, Sq))
+    kv_positions = jnp.broadcast_to(kv_positions, (B, Skv))
+
+    qc = _pick_chunk(Sq, q_chunk)
+    kc = _pick_chunk(Skv, chunk)
+
+    if qc == Sq and kc == Skv:
+        qg = q.reshape(B, Sq, KV, G, D)
+        s = cons(_scores(qg, k, scale))
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        qp = q_positions[:, None, None, :, None]
+        kp = kv_positions[:, None, None, None, :]
+        keep = sliding_window_mask(qp, kp, causal, window)
+        s = jnp.where(keep, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = _pv(p, v)
+        return out.reshape(B, Sq, H, D)
+
+    # ---- 2-D tiled online softmax ----
+    nq, nk = Sq // qc, Skv // kc
+    qt = q.reshape(B, nq, qc, H, D).transpose(1, 0, 2, 3, 4)
+    qpt = q_positions.reshape(B, nq, qc).transpose(1, 0, 2)
+    kt = k.reshape(B, nk, kc, KV, D).transpose(1, 0, 2, 3, 4)
+    vt = v.reshape(B, nk, kc, KV, D).transpose(1, 0, 2, 3, 4)
+    kpt = kv_positions.reshape(B, nk, kc).transpose(1, 0, 2)
+
+    def q_block(q_i, qp_i):
+        qg = q_i.reshape(B, qc, KV, G, D)
+        qg = constrain(qg, mesh, "batch", None, kv_logical, None, None)
+        qp = qp_i[:, None, None, :, None]              # (B,1,1,qc,1)
+        m0 = jnp.full((B, KV, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, qc, KV, G, D), jnp.float32)
+
+        def body(carry, xs):
+            m, l, acc = carry
+            k_i, v_i, p_i = xs
+            s = cons(_scores(qg, k_i, scale))          # (B,KV,G,qc,kc)
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            kp = p_i[:, None, None, None, :]
+            keep = sliding_window_mask(qp, kp, causal, window)
+            s = jnp.where(keep, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            corr = jnp.exp(m - m_new)
+            p = cons(jnp.exp(s - m_new[..., None]))
+            l_new = l * corr + p.sum(-1)
+            pv = _pv(p, v_i).astype(jnp.float32)       # (B,qc,KV,G,D)
+            pv = constrain(pv, mesh, "batch", None, kv_logical, None, None)
+            acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kt, vt, kpt))
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return out.astype(q.dtype).reshape(B, qc, H, D)
+
+    outs = jax.lax.map(lambda xs: q_block(*xs), (qt, qpt))  # (nq,B,qc,H,D)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)
+
+
+def decode_attention(q, cache_k, cache_v, cache_pos, cur_pos, *,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None):
+    """One-token attention against a position-tagged cache.
+
+    q (B,1,H,D); cache_k/v (B,C,KV,D); cache_pos (B,C) int32 (-1 empty);
+    cur_pos (B,) absolute position of the query token.
+    """
+    B, _, H, D = q.shape
+    C, KV = cache_k.shape[1], cache_k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, 1, KV, G, D)
+    s = _scores(qg, cache_k, scale)[:, :, :, 0, :]        # (B,KV,G,C)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    kp = cache_pos[:, None, None, :]
+    qp = cur_pos[:, None, None, None]
+    keep = (kp >= 0) & (kp <= qp)
+    if window is not None:
+        keep &= (qp - kp) < window
+    s = jnp.where(keep, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p.astype(cache_v.dtype), cache_v)
+    return out.reshape(B, 1, H, D)

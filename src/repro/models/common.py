@@ -1,0 +1,48 @@
+"""Shared model building blocks: norms, activations, dtype policy."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "layer_norm", "silu", "gelu", "softplus",
+           "cast_to_compute", "DTYPES"]
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+          "float16": jnp.float16}
+
+
+def cast_to_compute(params, cfg):
+    dt = DTYPES[cfg.compute_dtype]
+    return jax.tree.map(
+        lambda p: p.astype(dt) if jnp.issubdtype(p.dtype, jnp.floating) else p,
+        params)
+
+
+def rms_norm(x, scale, eps=1e-5):
+    """RMSNorm in fp32 (the norm is tiny; precision matters at bf16)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def softplus(x):
+    return jax.nn.softplus(x)

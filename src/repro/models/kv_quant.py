@@ -1,0 +1,69 @@
+"""int8 KV-cache quantization (serving memory/bandwidth feature, §Perf).
+
+Decode is cache-read bound: at bf16 a 32k qwen cache costs ~6.5 GiB/chip of
+HBM and one full read per token. Symmetric per-(position, head) int8
+quantization halves both, at a small logit error (tests bound it).
+
+Layout: k/v stored int8 with an fp scale per (batch, pos, kv_head):
+    q = round(x / s),  s = max|x| over head_dim / 127.
+Dequantize on read, right before the attention einsum (the einsum itself
+stays bf16/fp32 -- on TPU the dequant fuses into the cache-read loop).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_kv", "dequantize_kv", "init_quant_attn_cache",
+           "cache_write_one_quant", "cache_read_quant"]
+
+
+def quantize_kv(x):
+    """x (..., head_dim) -> (q int8 same shape, scale (...,) fp32)."""
+    xf = x.astype(jnp.float32)
+    s = jnp.max(jnp.abs(xf), axis=-1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / s[..., None]), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def dequantize_kv(q, s, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * s[..., None]).astype(dtype)
+
+
+def init_quant_attn_cache(cfg, batch, max_seq, kv_heads=None):
+    KV = kv_heads if kv_heads is not None else cfg.num_kv_heads
+    C = max_seq if cfg.sliding_window is None else min(max_seq,
+                                                       cfg.sliding_window)
+    hd = cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, C, KV, hd), jnp.int8),
+        "v": jnp.zeros((batch, C, KV, hd), jnp.int8),
+        "k_scale": jnp.zeros((batch, C, KV), jnp.float32),
+        "v_scale": jnp.zeros((batch, C, KV), jnp.float32),
+        "pos": jnp.full((batch, C), -1, jnp.int32),
+    }
+
+
+def cache_write_one_quant(cache, k1, v1, pos):
+    """Quantize-and-write one token. k1/v1 (B,1,KV,hd), pos (B,)."""
+    B = pos.shape[0]
+    C = cache["k"].shape[1]
+    slot = pos % C
+    bidx = jnp.arange(B)
+    kq, ks = quantize_kv(k1[:, 0])
+    vq, vs = quantize_kv(v1[:, 0])
+    return {
+        "k": cache["k"].at[bidx, slot].set(kq),
+        "v": cache["v"].at[bidx, slot].set(vq),
+        "k_scale": cache["k_scale"].at[bidx, slot].set(ks),
+        "v_scale": cache["v_scale"].at[bidx, slot].set(vs),
+        "pos": cache["pos"].at[bidx, slot].set(pos),
+    }
+
+
+def cache_read_quant(cache, dtype=jnp.bfloat16):
+    """Returns dequantized (k, v) views for attention."""
+    k = dequantize_kv(cache["k"], cache["k_scale"], dtype)
+    v = dequantize_kv(cache["v"], cache["v_scale"], dtype)
+    return k, v

@@ -1,0 +1,330 @@
+"""Top-level model API used by training, serving, and the dry-run.
+
+  forward(params, cfg, batch, mesh, mode)        -> logits, aux, state'
+  loss_fn(params, cfg, batch, mesh)              -> scalar loss, metrics
+  init_decode_state(cfg, batch, max_seq)         -> decode-state pytree
+  prefill / decode_step                          -> serving steps
+  input_specs(cfg, shape)                        -> ShapeDtypeStruct batch
+  decode_state_logical(cfg, state)               -> logical axes per leaf
+
+The modality frontends are STUBS per the assignment: ``frames`` (audio) and
+``patches`` (vlm) arrive as precomputed d_model embeddings and pass through a
+learned adapter.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer as tf
+from repro.models import ssm as ssm_mod
+from repro.models.common import DTYPES, cast_to_compute, layer_norm, rms_norm
+from repro.models.transformer import hybrid_attn_layout, sinusoid
+from repro.parallel.sharding import constrain
+
+__all__ = ["forward", "loss_fn", "prefill", "decode_step",
+           "init_decode_state", "input_specs", "decode_state_logical",
+           "make_batch"]
+
+MOE_AUX_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg, mesh):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return constrain(x, mesh, "batch", None, None)
+
+
+def _head(params, x, cfg, mesh):
+    if "final_norm_b" in params:
+        x = layer_norm(x, params["final_norm"], params["final_norm_b"],
+                       cfg.norm_eps)
+    else:
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return constrain(logits, mesh, "batch", None, "vocab")
+
+
+def _frontend(params, batch, cfg, mesh, mode):
+    """Adapt precomputed frontend embeddings (stub). Returns (B,F,d) or None."""
+    key = "frames" if cfg.frontend == "audio" else "patches"
+    if cfg.frontend is None or (mode == "decode") or key not in batch:
+        return None
+    emb = batch[key].astype(DTYPES[cfg.compute_dtype])
+    return jnp.einsum("bfd,de->bfe", emb, params["frontend_adapter"])
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, batch, mesh=None, mode="train",
+            state=None, positions=None):
+    """Returns (logits, aux_loss, new_state). ``state`` is the decode-state
+    pytree for prefill/decode; None in train mode."""
+    cparams = cast_to_compute(params, cfg)
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+
+    if cfg.family == "encdec":
+        return _forward_encdec(cparams, cfg, batch, mesh, mode, state,
+                               positions)
+
+    x = _embed(cparams, tokens, cfg, mesh)
+    front = _frontend(cparams, batch, cfg, mesh, mode)
+    if front is not None:
+        x = jnp.concatenate([front, x], axis=1)
+    S = x.shape[1]
+
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    lay = cparams["layers"]
+    if cfg.family in ("dense", "vlm", "moe"):
+        caches = None if state is None else state["layer_caches"]
+        stack = tf.moe_stack if cfg.family == "moe" else tf.dense_stack
+        x, new_caches, aux = stack(x, lay, cfg, mesh, positions, mode, caches)
+        new_state = None if state is None else {"layer_caches": new_caches}
+    elif cfg.family == "ssm":
+        states = None if state is None else state["layer_states"]
+        x, new_states, aux = tf.ssm_stack(x, lay, cfg, mesh, positions, mode,
+                                          states)
+        new_state = None if state is None else {"layer_states": new_states}
+    elif cfg.family == "hybrid":
+        states = None if state is None else state["layer_states"]
+        acaches = None if state is None else state["attn_caches"]
+        x, new_states, new_acaches, aux = tf.hybrid_stack(
+            x, lay, cparams["shared"], cfg, mesh, positions, mode, states,
+            acaches)
+        new_state = (None if state is None else
+                     {"layer_states": new_states, "attn_caches": new_acaches})
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _head(cparams, x, cfg, mesh)
+    return logits, aux, new_state
+
+
+def _forward_encdec(cparams, cfg, batch, mesh, mode, state, positions):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+
+    if mode in ("train", "prefill"):
+        front = _frontend(cparams, batch, cfg, mesh, mode)
+        F = front.shape[1]
+        fpos = jnp.broadcast_to(jnp.arange(F)[None], (B, F))
+        enc_in = front + sinusoid(fpos, cfg.d_model).astype(front.dtype)
+        enc_out = tf.encoder_stack(enc_in, cparams["encoder"]["layers"], cfg,
+                                   mesh, fpos)
+        enc_out = layer_norm(enc_out, cparams["encoder"]["norm"],
+                             cparams["encoder"]["norm_b"], cfg.norm_eps)
+    else:
+        enc_out = None
+
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = _embed(cparams, tokens, cfg, mesh)
+    x = x + sinusoid(positions, cfg.d_model).astype(x.dtype)
+
+    caches = None if state is None else state["layer_caches"]
+    ckv = state["cross_kv"] if (state is not None and mode == "decode") \
+        else None
+    x, new_caches, new_ckv = tf.decoder_stack(
+        x, cparams["layers"], cfg, mesh, positions, enc_out=enc_out,
+        mode=mode, caches=caches, cross_kv=ckv)
+    new_state = None
+    if state is not None:
+        new_state = {"layer_caches": new_caches,
+                     "cross_kv": new_ckv if mode == "prefill"
+                     else state["cross_kv"]}
+    logits = _head(cparams, x, cfg, mesh)
+    return logits, jnp.zeros((), jnp.float32), new_state
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, mesh=None):
+    """Stable fp32 next-token xent. logits (B,T,V), labels (B,T)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    picked = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return (lse - picked).mean()
+
+
+def loss_fn(params, cfg: ModelConfig, batch, mesh=None):
+    logits, aux, _ = forward(params, cfg, batch, mesh, mode="train")
+    F = cfg.frontend_len if (cfg.frontend == "vlm") else 0
+    S = batch["tokens"].shape[1]
+    # logits position F+i predicts tokens[i+1]
+    lg = jax.lax.slice_in_dim(logits, F, F + S - 1, axis=1)
+    labels = batch["tokens"][:, 1:]
+    loss = cross_entropy(lg, labels, mesh)
+    metrics = {"xent": loss, "aux": aux}
+    if cfg.family == "moe":
+        loss = loss + MOE_AUX_COEF * aux
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode state
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int,
+                      dtype=jnp.bfloat16):
+    L = cfg.num_layers
+
+    def stack_layer(make, n):
+        one = make()
+        return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape),
+                            one)
+
+    if cfg.family in ("dense", "vlm", "moe", "encdec"):
+        state = {"layer_caches": stack_layer(
+            lambda: tf.init_attn_cache(cfg, batch, max_seq, dtype=dtype), L)}
+        if cfg.family == "encdec":
+            F, KV, hd = cfg.frontend_len, cfg.num_kv_heads, cfg.head_dim_
+            state["cross_kv"] = {
+                "k": jnp.zeros((L, batch, F, KV, hd), dtype),
+                "v": jnp.zeros((L, batch, F, KV, hd), dtype),
+            }
+        return state
+    if cfg.family == "ssm":
+        return {"layer_states": stack_layer(
+            lambda: ssm_mod.init_ssm_state(cfg, batch, dtype), L)}
+    if cfg.family == "hybrid":
+        _, _, n_attn = hybrid_attn_layout(cfg)
+        return {
+            "layer_states": stack_layer(
+                lambda: ssm_mod.init_ssm_state(cfg, batch, dtype), L),
+            "attn_caches": stack_layer(
+                lambda: tf.init_attn_cache(cfg, batch, max_seq, dtype=dtype),
+                n_attn),
+        }
+    raise ValueError(cfg.family)
+
+
+def decode_state_logical(cfg, state):
+    """Logical sharding axes for every decode-state leaf (path-based).
+
+    With cfg.shard_cache_seq (§Perf) the cache SEQUENCE dim is sharded over
+    the model axis (flash-decoding style): each model shard attends to its
+    cache slice and XLA inserts the tiny softmax max/sum + PV all-reduces.
+    This is what fits 32k caches when kv_heads doesn't divide the model
+    axis (qwen: 20 kv heads on a 16-wide axis)."""
+    def rule(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        nd = leaf.ndim
+        ax = [None] * nd
+        ax[1] = "batch"                       # all leaves: (stack, B, ...)
+        if names[-1] in ("k", "v", "k_scale", "v_scale"):
+            if cfg.shard_cache_seq:
+                ax[2] = "kv_seq"
+            elif names[-1] in ("k", "v"):
+                ax[3] = "kv_heads"
+        elif names[-1] == "pos":
+            if cfg.shard_cache_seq:
+                ax[2] = "kv_seq"
+        elif names[-1] == "ssm":
+            ax[2] = "ssm_heads"
+        elif names[-1].startswith("conv_x"):
+            ax[3] = "ffn"
+        return tuple(ax)
+
+    return jax.tree_util.tree_map_with_path(rule, state)
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg, batch, state, mesh=None):
+    """Full-sequence prefill writing caches. Returns (last_logits, state)."""
+    logits, _, new_state = forward(params, cfg, batch, mesh, mode="prefill",
+                                   state=state)
+    return logits[:, -1], new_state
+
+
+def decode_step(params, cfg, tokens, pos, state, mesh=None):
+    """One decode step. tokens (B,1) int32, pos (B,) int32 absolute position.
+
+    Returns (logits (B,V), new_state). This is the function the decode_* and
+    long_* dry-run cells lower (one new token against a seq_len-sized cache).
+    """
+    positions = pos[:, None]
+    logits, _, new_state = forward(params, cfg, {"tokens": tokens}, mesh,
+                                   mode="decode", state=state,
+                                   positions=positions)
+    return logits[:, 0], new_state
+
+
+# ---------------------------------------------------------------------------
+# input specs / synthetic batches
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (weak-type-correct, shardable, no device allocation)."""
+    B = shape.global_batch
+    if shape.kind in ("train", "prefill"):
+        S = shape.seq_len
+        specs = {}
+        if cfg.frontend == "vlm":
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S - cfg.frontend_len),
+                                                   jnp.int32)
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.d_model), jnp.float32)
+        elif cfg.frontend == "audio":
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.d_model), jnp.float32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return specs
+    # decode: one token + positions (cache is a separate argument)
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((B,), jnp.int32)}
+
+
+def batch_logical(cfg, shape):
+    """Logical axes for each input-spec leaf."""
+    out = {}
+    for k, v in input_specs(cfg, shape).items():
+        ax = [None] * len(v.shape)
+        if k != "pos":
+            ax[0] = "batch"
+        else:
+            ax[0] = "batch"
+        out[k] = tuple(ax)
+    return out
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, key=None):
+    """Materialized synthetic batch for smoke tests / examples."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    k1, k2 = jax.random.split(key)
+    out = {}
+    if cfg.frontend == "vlm":
+        out["tokens"] = jax.random.randint(
+            k1, (batch, seq - cfg.frontend_len), 0, cfg.vocab_size, jnp.int32)
+        out["patches"] = jax.random.normal(
+            k2, (batch, cfg.frontend_len, cfg.d_model), jnp.float32)
+    elif cfg.frontend == "audio":
+        out["tokens"] = jax.random.randint(k1, (batch, seq), 0,
+                                           cfg.vocab_size, jnp.int32)
+        out["frames"] = jax.random.normal(
+            k2, (batch, cfg.frontend_len, cfg.d_model), jnp.float32)
+    else:
+        out["tokens"] = jax.random.randint(k1, (batch, seq), 0,
+                                           cfg.vocab_size, jnp.int32)
+    return out

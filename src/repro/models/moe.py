@@ -1,0 +1,88 @@
+"""Token-choice top-k MoE with sort-based capacity dispatch (EP-friendly).
+
+The dispatch avoids GShard's dense (tokens, experts, capacity) one-hot --
+prohibitive at 1M tokens -- by sorting token->expert assignments and
+scatter/gathering into an (experts, capacity, d_model) buffer:
+
+  1. router top-k per token, gates renormalized;
+  2. flat (T*k,) assignments argsorted by expert id;
+  3. position-within-expert via a searchsorted prefix; tokens beyond the
+     per-expert capacity C = T*k/E * capacity_factor are DROPPED (their gate
+     contribution is simply skipped -- standard capacity-drop semantics);
+  4. batched expert SwiGLU over (E, C, d) -- expert dim sharded over
+     ``model`` (EP) when divisible, buffer capacity over ``data``. The
+     scatter/gather across the (token->expert) resharding boundary is where
+     GSPMD emits the MoE all-to-all.
+
+Router runs in fp32; an auxiliary load-balancing loss (Switch-style) is
+returned for the train loop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import silu
+from repro.parallel.sharding import constrain
+
+__all__ = ["moe_block", "router_topk"]
+
+
+def router_topk(x2d, w_router, k):
+    """x2d (T, d) -> gates (T, k) fp32, idx (T, k) int32, aux loss scalar."""
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32),
+                        w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch aux loss: E * sum_e (frac tokens to e) * (mean prob of e)
+    E = w_router.shape[-1]
+    me = probs.mean(0)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(
+        jnp.ones_like(idx.reshape(-1), jnp.float32)) / (idx.size)
+    aux = E * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def moe_block(x2d, params, cfg, mesh=None):
+    """x2d (T, d_model) -> (T, d_model), aux_loss.
+
+    params: {"router": (d, E), "w_gate": (E, d, ff), "w_up": (E, d, ff),
+             "w_down": (E, ff, d)}
+    """
+    T, d = x2d.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    C = int(T * k / E * cfg.capacity_factor)
+    C = max(8, -(-C // 8) * 8)  # round up to 8 for TPU-friendly tiling
+
+    gates, idx, aux = router_topk(x2d, params["router"], k)
+
+    flat_e = idx.reshape(-1)                                  # (T*k,)
+    order = jnp.argsort(flat_e)                               # stable
+    sorted_e = flat_e[order]
+    token_of = order // k
+    first_of_e = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos_in_e = jnp.arange(T * k) - first_of_e[sorted_e]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)    # E*C = dropped
+
+    # dispatch: (E*C, d) buffer; one trailing dump row absorbs drops
+    buf = jnp.zeros((E * C + 1, d), x2d.dtype).at[slot].set(x2d[token_of])
+    xb = buf[:-1].reshape(E, C, d)
+    xb = constrain(xb, mesh, "experts", "capacity", None)
+
+    # batched expert SwiGLU
+    g = jnp.einsum("ecd,edf->ecf", xb, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xb, params["w_up"])
+    h = silu(g) * u
+    yb = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    yb = constrain(yb, mesh, "experts", "capacity", None)
+
+    # combine: gather back, weight by gate, scatter-add per token
+    ybf = jnp.concatenate(
+        [yb.reshape(E * C, d), jnp.zeros((1, d), yb.dtype)], 0)
+    contrib = ybf[slot] * gates.reshape(-1)[order][:, None].astype(yb.dtype)
+    y = jnp.zeros((T, d), x2d.dtype).at[token_of].add(
+        jnp.where(keep[:, None], contrib, 0.0))
+    return y, aux

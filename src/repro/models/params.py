@@ -1,0 +1,229 @@
+"""Parameter table: ONE source of truth for shapes, logical sharding axes,
+and initializers, for every architecture family.
+
+``param_table(cfg)`` returns a flat {path: PSpec}; from it derive
+  init_params(cfg, key)      -- materialized pytree (smoke tests / examples)
+  abstract_params(cfg)       -- ShapeDtypeStruct pytree (dry-run, no alloc)
+  param_specs(cfg, mesh)     -- PartitionSpec pytree via parallel.sharding
+Nested-dict paths use '/' separators; ``unflatten`` rebuilds the tree the
+forward code consumes. Stacked layer params carry a leading ("layers",) dim
+consumed by lax.scan.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.common import DTYPES
+from repro.parallel.sharding import PARAM_RULES, spec_for
+
+__all__ = ["PSpec", "param_table", "init_params", "abstract_params",
+           "param_specs", "unflatten", "flatten"]
+
+
+@dataclass(frozen=True)
+class PSpec:
+    shape: tuple
+    logical: tuple
+    init: str = "normal"       # normal | zeros | ones | a_log | dt_bias
+
+
+def _attn(cfg: ModelConfig, L: Optional[int], prefix: str, table,
+          kv_heads=None, bias=None, ln_bias=False):
+    d, H = cfg.d_model, cfg.num_heads
+    KV = kv_heads if kv_heads is not None else cfg.num_kv_heads
+    hd = cfg.head_dim_
+    bias = cfg.qkv_bias if bias is None else bias
+    Ld = () if L is None else (L,)
+    La = () if L is None else ("layers",)
+
+    def put(name, shape, logical, init="normal"):
+        table[f"{prefix}{name}"] = PSpec(Ld + shape, La + logical, init)
+
+    put("norm", (d,), ("embed",), "zeros" if not ln_bias else "ones")
+    if ln_bias:
+        put("norm_b", (d,), ("embed",), "zeros")
+    put("wq", (d, H, hd), ("embed", "heads", "head_dim"))
+    put("wk", (d, KV, hd), ("embed", "kv_heads", "head_dim"))
+    put("wv", (d, KV, hd), ("embed", "kv_heads", "head_dim"))
+    put("wo", (H, hd, d), ("heads", "head_dim", "embed"))
+    if bias:
+        put("bq", (H, hd), ("heads", "head_dim"), "zeros")
+        put("bk", (KV, hd), ("kv_heads", "head_dim"), "zeros")
+        put("bv", (KV, hd), ("kv_heads", "head_dim"), "zeros")
+
+
+def _mlp(cfg: ModelConfig, L: Optional[int], prefix: str, table,
+         gelu=False, ln_bias=False):
+    d, ff = cfg.d_model, cfg.d_ff
+    Ld = () if L is None else (L,)
+    La = () if L is None else ("layers",)
+
+    def put(name, shape, logical, init="normal"):
+        table[f"{prefix}{name}"] = PSpec(Ld + shape, La + logical, init)
+
+    put("norm", (d,), ("embed",), "zeros" if not ln_bias else "ones")
+    if ln_bias:
+        put("norm_b", (d,), ("embed",), "zeros")
+    if gelu:
+        put("w1", (d, ff), ("embed", "ffn"))
+        put("b1", (ff,), ("ffn",), "zeros")
+        put("w2", (ff, d), ("ffn", "embed"))
+        put("b2", (d,), ("embed",), "zeros")
+    else:
+        put("w_gate", (d, ff), ("embed", "ffn"))
+        put("w_up", (d, ff), ("embed", "ffn"))
+        put("w_down", (ff, d), ("ffn", "embed"))
+
+
+def _moe(cfg: ModelConfig, L: int, prefix: str, table):
+    d, E, ffe = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    table[f"{prefix}norm"] = PSpec((L, d), ("layers", "embed"), "zeros")
+    table[f"{prefix}router"] = PSpec((L, d, E), ("layers", "embed", "experts"))
+    for w in ("w_gate", "w_up"):
+        table[f"{prefix}{w}"] = PSpec(
+            (L, E, d, ffe), ("layers", "experts", "embed", "expert_ffn"))
+    table[f"{prefix}w_down"] = PSpec(
+        (L, E, ffe, d), ("layers", "experts", "expert_ffn", "embed"))
+
+
+def _ssm(cfg: ModelConfig, L: int, prefix: str, table):
+    d, din = cfg.d_model, cfg.d_inner
+    H, N, W = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_conv_width
+
+    def put(name, shape, logical, init="normal"):
+        table[f"{prefix}{name}"] = PSpec((L,) + shape, ("layers",) + logical,
+                                         init)
+
+    put("norm_in", (d,), ("embed",), "zeros")
+    put("w_z", (d, din), ("embed", "ffn"))
+    put("w_x", (d, din), ("embed", "ffn"))
+    put("w_B", (d, N), ("embed", "ssm_state"))
+    put("w_C", (d, N), ("embed", "ssm_state"))
+    put("w_dt", (d, H), ("embed", "ssm_heads"))
+    put("conv_x", (W, din), ("conv", "ffn"))
+    put("conv_B", (W, N), ("conv", "ssm_state"))
+    put("conv_C", (W, N), ("conv", "ssm_state"))
+    put("A_log", (H,), ("ssm_heads",), "a_log")
+    put("D", (H,), ("ssm_heads",), "ones")
+    put("dt_bias", (H,), ("ssm_heads",), "dt_bias")
+    put("norm", (din,), ("ffn",), "zeros")
+    put("w_out", (din, d), ("ffn", "embed"))
+
+
+def param_table(cfg: ModelConfig) -> dict[str, PSpec]:
+    t: dict[str, PSpec] = {}
+    d, V, L = cfg.d_model, cfg.vocab_size, cfg.num_layers
+    t["embed"] = PSpec((V, d), ("vocab", "embed"))
+
+    if cfg.family in ("dense", "vlm"):
+        _attn(cfg, L, "layers/attn/", t)
+        _mlp(cfg, L, "layers/mlp/", t)
+    elif cfg.family == "moe":
+        _attn(cfg, L, "layers/attn/", t)
+        _moe(cfg, L, "layers/moe/", t)
+    elif cfg.family == "ssm":
+        _ssm(cfg, L, "layers/ssm/", t)
+    elif cfg.family == "hybrid":
+        _ssm(cfg, L, "layers/ssm/", t)
+        _attn(cfg, None, "shared/attn/", t)      # ONE shared block (Zamba2)
+        _mlp(cfg, None, "shared/mlp/", t)
+    elif cfg.family == "encdec":
+        Le = cfg.encoder_layers
+        _attn(cfg, Le, "encoder/layers/attn/", t, bias=True, ln_bias=True)
+        _mlp(cfg, Le, "encoder/layers/mlp/", t, gelu=True, ln_bias=True)
+        t["encoder/norm"] = PSpec((d,), ("embed",), "ones")
+        t["encoder/norm_b"] = PSpec((d,), ("embed",), "zeros")
+        _attn(cfg, L, "layers/attn/", t, bias=True, ln_bias=True)
+        _attn(cfg, L, "layers/cross/", t, bias=True, ln_bias=True)
+        _mlp(cfg, L, "layers/mlp/", t, gelu=True, ln_bias=True)
+    else:
+        raise ValueError(cfg.family)
+
+    if cfg.family == "encdec":
+        t["final_norm"] = PSpec((d,), ("embed",), "ones")
+        t["final_norm_b"] = PSpec((d,), ("embed",), "zeros")
+    else:
+        t["final_norm"] = PSpec((d,), ("embed",), "zeros")
+    if cfg.frontend:
+        t["frontend_adapter"] = PSpec((d, d), ("embed", "embed_tp"))
+    if not cfg.tie_embeddings:
+        t["unembed"] = PSpec((d, V), ("embed", "vocab"))
+    return t
+
+
+# ---------------------------------------------------------------------------
+# materialization
+# ---------------------------------------------------------------------------
+
+def _init_leaf(key, spec: PSpec, dtype):
+    shape = spec.shape
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, dtype)
+    if spec.init == "a_log":
+        u = jax.random.uniform(key, shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if spec.init == "dt_bias":
+        dt = jax.random.uniform(key, shape, jnp.float32, 1e-3, 1e-1)
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)  # softplus^-1
+    # fan-in scaled normal
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    if len(shape) >= 3:  # (.., d, H, hd)-style: fan-in is the input dim
+        fan_in = shape[-3] if len(shape) == 3 else shape[-3]
+    std = min(0.02, 1.0 / math.sqrt(max(fan_in, 1)))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = DTYPES[cfg.param_dtype]
+    table = param_table(cfg)
+    out = {}
+    for i, (path, spec) in enumerate(sorted(table.items())):
+        out[path] = _init_leaf(jax.random.fold_in(key, i), spec, dtype)
+    return unflatten(out)
+
+
+def abstract_params(cfg: ModelConfig):
+    dtype = DTYPES[cfg.param_dtype]
+    return unflatten({p: jax.ShapeDtypeStruct(s.shape, dtype)
+                      for p, s in param_table(cfg).items()})
+
+
+def param_specs(cfg: ModelConfig, mesh):
+    return unflatten({p: spec_for(s.shape, s.logical, mesh, PARAM_RULES)
+                      for p, s in param_table(cfg).items()})
+
+
+# ---------------------------------------------------------------------------
+# path <-> tree
+# ---------------------------------------------------------------------------
+
+def unflatten(flat: dict):
+    tree: dict = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+def flatten(tree: dict, prefix=""):
+    out = {}
+    for k, v in tree.items():
+        path = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(flatten(v, path + "/"))
+        else:
+            out[path] = v
+    return out

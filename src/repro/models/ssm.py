@@ -1,0 +1,220 @@
+"""Mamba-2 SSD (state-space duality) block: chunked training scan + O(1)
+single-token decode.
+
+Selective state space with scalar-per-head decay (the SSD restriction):
+
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * B_t (x) x_t      h: (H, P, N)
+    y_t = C_t . h_t + D_h * x_t
+
+Training uses the SSD chunked algorithm (Dao & Gu 2024): the sequence is
+split into chunks of Q tokens; within a chunk the recurrence is expanded to
+an attention-like quadratic form (matmul -> MXU work), across chunks a short
+`lax.scan` carries the (H, P, N) state. Per-token memory stays
+O(Q + N*P/Q-amortized) -- this is what makes prefill_32k and the 500k decode
+cells feasible.
+
+Shapes: x (B, S, d_model); internal (B, S, H, P) with H = ssm_heads,
+P = ssm_head_dim, N = ssm_state; n_groups = 1 (B/C shared across heads).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import silu, softplus, rms_norm
+
+__all__ = ["ssm_forward", "ssm_decode_step", "init_ssm_state", "ssd_scan_ref"]
+
+CHUNK = 128  # SSD chunk length (Q); VMEM-friendly, MXU-aligned
+
+
+def _proj(x, w):
+    return jnp.einsum("bsd,df->bsf", x, w)
+
+
+def _conv1d_causal(x, kernel, state=None):
+    """Depthwise causal conv. x (B,S,F), kernel (W,F). Returns (y, new_state)
+    where state holds the last W-1 inputs for streaming decode."""
+    W = kernel.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (W - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)              # (B, S+W-1, F)
+    idx = jnp.arange(x.shape[1])[:, None] + jnp.arange(W)[None, :]
+    windows = xp[:, idx, :]                              # (B, S, W, F)
+    y = jnp.einsum("bswf,wf->bsf", windows, kernel)
+    new_state = xp[:, -(W - 1):, :]
+    return y, new_state
+
+
+def _segsum(dA):
+    """dA (..., Q) -> L (..., Q, Q) with L[i,j] = sum_{j<k<=i} dA_k for j<=i,
+    -inf above the diagonal (log-space intra-chunk decay)."""
+    Q = dA.shape[-1]
+    cum = jnp.cumsum(dA, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]        # sum_(j,i]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, init_state=None):
+    """Chunked SSD scan.
+
+    xh (B,S,H,P); dt (B,S,H) (already softplus'ed, >=0); A (H,) (negative);
+    Bm/Cm (B,S,N). Returns y (B,S,H,P), final_state (B,H,P,N).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(CHUNK, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    f32 = jnp.float32
+    xc = xh.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(f32)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    dA = dtc * A.astype(f32)                            # (B,nc,Q,H), <= 0
+    dAh = jnp.moveaxis(dA, -1, 2)                       # (B,nc,H,Q)
+    cum = jnp.cumsum(dAh, axis=-1)                      # (B,nc,H,Q)
+    total = cum[..., -1]                                # (B,nc,H)
+
+    # ---- intra-chunk (quadratic, attention-like) ----
+    L = jnp.exp(_segsum(dAh))                           # (B,nc,H,Q,Q)
+    CB = jnp.einsum("bcqn,bcsn->bcqs", Cc.astype(f32), Bc.astype(f32))
+    xdt = xc.astype(f32) * dtc[..., None]               # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bchqs,bcqs,bcshp->bcqhp", L, CB, xdt)
+    # ---- chunk summary states: S_c = sum_s exp(cum_end - cum_s) B_s (x) xdt_s
+    decay_to_end = jnp.exp(total[..., None] - cum)      # (B,nc,H,Q)
+    states = jnp.einsum("bchq,bcqn,bcqhp->bchpn",
+                        decay_to_end, Bc.astype(f32), xdt)
+
+    # ---- inter-chunk recurrence over nc ----
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), f32)
+
+    def body(h, xs):
+        st, tot = xs                                    # (B,H,P,N), (B,H)
+        h_out = h                                       # state BEFORE chunk
+        h_new = h * jnp.exp(tot)[..., None, None] + st
+        return h_new, h_out
+
+    sc = jnp.moveaxis(states, 1, 0)                     # (nc,B,H,P,N)
+    tc = jnp.moveaxis(total, 1, 0)                      # (nc,B,H)
+    final_state, prev_states = jax.lax.scan(body, init_state.astype(f32),
+                                            (sc, tc))
+    prev = jnp.moveaxis(prev_states, 0, 1)              # (B,nc,H,P,N)
+
+    # ---- inter-chunk output: y += C_q . exp(cum_q) h_prev ----
+    decay_in = jnp.exp(cum)                             # (B,nc,H,Q)
+    y_inter = jnp.einsum("bcqn,bchq,bchpn->bcqhp",
+                         Cc.astype(f32), decay_in, prev)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y.astype(xh.dtype), final_state
+
+
+def ssd_scan_ref(xh, dt, A, Bm, Cm, init_state=None):
+    """Token-by-token reference recurrence (oracle for tests)."""
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), f32)
+
+    def body(h, xs):
+        x_t, dt_t, B_t, C_t = xs
+        dA = jnp.exp(dt_t.astype(f32) * A.astype(f32))            # (B,H)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt_t.astype(f32),
+                         x_t.astype(f32), B_t.astype(f32))
+        h = h * dA[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", C_t.astype(f32), h)
+        return h, y
+
+    xs = (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    h, ys = jax.lax.scan(body, init_state.astype(f32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(xh.dtype), h
+
+
+def _split_proj(x, p, cfg):
+    """Run the five input projections; returns z, xh, B, C, dt(raw)."""
+    z = _proj(x, p["w_z"])
+    xin = _proj(x, p["w_x"])
+    Bm = _proj(x, p["w_B"])
+    Cm = _proj(x, p["w_C"])
+    dt = _proj(x, p["w_dt"])
+    return z, xin, Bm, Cm, dt
+
+
+def ssm_forward(x, p, cfg, init_state=None, conv_states=None):
+    """Full-sequence Mamba-2 block. x (B,S,d_model) -> same shape.
+
+    Returns (y, (ssm_state, conv_states)) so prefill can hand the state to
+    the decoder.
+    """
+    Bsz, S, _ = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xin, Bm, Cm, dt = _split_proj(x, p, cfg)
+
+    cs = conv_states or {"x": None, "B": None, "C": None}
+    xin, cs_x = _conv1d_causal(xin, p["conv_x"], cs["x"])
+    Bm, cs_B = _conv1d_causal(Bm, p["conv_B"], cs["B"])
+    Cm, cs_C = _conv1d_causal(Cm, p["conv_C"], cs["C"])
+    xin, Bm, Cm = silu(xin), silu(Bm), silu(Cm)
+
+    xh = xin.reshape(Bsz, S, H, P)
+    dt = softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, state = ssd_chunked(xh, dt, A, Bm, Cm, init_state)
+    y = y + xh * p["D"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, S, H * P)
+    y = rms_norm(y * silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsf,fd->bsd", y, p["w_out"])
+    return out, (state, {"x": cs_x, "B": cs_B, "C": cs_C})
+
+
+def init_ssm_state(cfg, batch, dtype=jnp.float32):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    W = cfg.ssm_conv_width
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv_x": jnp.zeros((batch, W - 1, cfg.d_inner), dtype),
+        "conv_B": jnp.zeros((batch, W - 1, N), dtype),
+        "conv_C": jnp.zeros((batch, W - 1, N), dtype),
+    }
+
+
+def ssm_decode_step(x1, p, cfg, state):
+    """Single-token step. x1 (B,1,d_model); state from init_ssm_state.
+
+    Returns (y (B,1,d_model), new_state). O(1) in context length -- the
+    reason mamba2/zamba2 run the long_500k cell.
+    """
+    Bsz = x1.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xin, Bm, Cm, dt = _split_proj(x1, p, cfg)
+
+    xin, cx = _conv1d_causal(xin, p["conv_x"], state["conv_x"])
+    Bm, cB = _conv1d_causal(Bm, p["conv_B"], state["conv_B"])
+    Cm, cC = _conv1d_causal(Cm, p["conv_C"], state["conv_C"])
+    xin, Bm, Cm = silu(xin), silu(Bm), silu(Cm)
+
+    xh = xin.reshape(Bsz, 1, H, P)[:, 0]                     # (B,H,P)
+    dt = softplus(dt.astype(jnp.float32)
+                  + p["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                     # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh.astype(jnp.float32),
+                     Bm[:, 0].astype(jnp.float32))
+    h = state["ssm"] * dA[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h)
+    y = y.astype(x1.dtype) + xh * p["D"].astype(x1.dtype)[None, :, None]
+    y = y.reshape(Bsz, 1, H * P)
+    y = rms_norm(y * silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsf,fd->bsd", y, p["w_out"])
+    return out, {"ssm": h, "conv_x": cx, "conv_B": cB, "conv_C": cC}

@@ -1,0 +1,509 @@
+"""Transformer / hybrid / SSM stacks: block forward fns + lax.scan'd layer
+stacks with remat, full-sequence (train/prefill) and single-token (decode)
+modes, and position-tagged KV caches.
+
+Every homogeneous stack is a `lax.scan` over stacked (L, ...) params with
+`jax.checkpoint` on the body, so HLO size is depth-independent -- deepseek's
+95 layers compile as one layer (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (apply_rope, attention, decode_attention)
+from repro.models.common import gelu, layer_norm, rms_norm, silu
+from repro.models.moe import moe_block
+from repro.parallel.sharding import constrain
+
+__all__ = ["dense_stack", "moe_stack", "ssm_stack", "hybrid_stack",
+           "encoder_stack", "decoder_stack", "init_attn_cache", "sinusoid",
+           "hybrid_attn_layout"]
+
+
+# ---------------------------------------------------------------------------
+# small helpers
+# ---------------------------------------------------------------------------
+
+def _norm(x, p, cfg):
+    if "norm_b" in p:
+        return layer_norm(x, p["norm"], p["norm_b"], cfg.norm_eps)
+    return rms_norm(x, p["norm"], cfg.norm_eps)
+
+
+def sinusoid(positions, d):
+    """Sinusoidal position embedding (whisper stub). positions (B,S)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (np.log(10000.0) / max(half - 1, 1)))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_attn_cache(cfg, batch, max_seq, kv_heads=None, dtype=jnp.bfloat16):
+    """One layer's KV cache. SWA uses a ring buffer of window slots."""
+    if cfg.kv_cache_dtype == "int8":
+        from repro.models.kv_quant import init_quant_attn_cache
+        return init_quant_attn_cache(cfg, batch, max_seq, kv_heads)
+    KV = kv_heads if kv_heads is not None else cfg.num_kv_heads
+    C = max_seq if cfg.sliding_window is None else min(max_seq,
+                                                       cfg.sliding_window)
+    hd = cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, C, KV, hd), dtype),
+        "v": jnp.zeros((batch, C, KV, hd), dtype),
+        "pos": jnp.full((batch, C), -1, jnp.int32),
+    }
+
+
+def _cache_write_full(cache, k, v, positions):
+    """Write a full prefill sequence (positions (B,S)) into the cache."""
+    B, S = positions.shape
+    C = cache["k"].shape[1]
+    if S > C:                       # SWA ring: only the last C tokens survive
+        k, v, positions = k[:, -C:], v[:, -C:], positions[:, -C:]
+        S = C
+    slots = positions % C
+    bidx = jnp.arange(B)[:, None]
+    if "k_scale" in cache:          # int8 quantized cache
+        from repro.models.kv_quant import quantize_kv
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        return {
+            "k": cache["k"].at[bidx, slots].set(kq),
+            "v": cache["v"].at[bidx, slots].set(vq),
+            "k_scale": cache["k_scale"].at[bidx, slots].set(ks),
+            "v_scale": cache["v_scale"].at[bidx, slots].set(vs),
+            "pos": cache["pos"].at[bidx, slots].set(positions),
+        }
+    return {
+        "k": cache["k"].at[bidx, slots].set(k.astype(cache["k"].dtype)),
+        "v": cache["v"].at[bidx, slots].set(v.astype(cache["v"].dtype)),
+        "pos": cache["pos"].at[bidx, slots].set(positions),
+    }
+
+
+def _cache_write_one(cache, k1, v1, pos):
+    """Write one token (k1/v1 (B,1,KV,hd), pos (B,))."""
+    B = pos.shape[0]
+    C = cache["k"].shape[1]
+    slot = pos % C
+    bidx = jnp.arange(B)
+    return {
+        "k": cache["k"].at[bidx, slot].set(k1[:, 0].astype(cache["k"].dtype)),
+        "v": cache["v"].at[bidx, slot].set(v1[:, 0].astype(cache["v"].dtype)),
+        "pos": cache["pos"].at[bidx, slot].set(pos),
+    }
+
+
+def _qkv(h, p):
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# sublayers
+# ---------------------------------------------------------------------------
+
+def attn_sublayer(x, p, cfg, mesh, positions, *, cache=None, mode="train",
+                  causal=True, window=None, rope=True):
+    """Pre-norm residual attention. Returns (x, new_cache)."""
+    h = _norm(x, p, cfg)
+    q, k, v = _qkv(h, p)
+    theta = cfg.rope_theta if rope else 0.0
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    q = constrain(q, mesh, "batch", None, "heads", None)
+    k = constrain(k, mesh, "batch", None, "kv_heads", None)
+
+    k_cache, v_cache = k, v          # caches always hold KV (not H) heads
+    if cfg.gqa_repeat_kv and mode != "decode" and k.shape[2] < q.shape[2]:
+        # §Perf: expand KV->H so the score tensor keeps the q-head sharding
+        # (the (KV,G) grouped reshape is unshardable when KV % model != 0
+        # and XLA replicates every head's scores on every chip)
+        G = q.shape[2] // k.shape[2]
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        k = constrain(k, mesh, "batch", None, "heads", None)
+        v = constrain(v, mesh, "batch", None, "heads", None)
+
+    new_cache = cache
+    if mode == "decode":
+        if cache is not None and "k_scale" in cache:      # int8 cache
+            from repro.models.kv_quant import (cache_read_quant,
+                                               cache_write_one_quant)
+            new_cache = cache_write_one_quant(cache, k, v, positions[:, 0])
+            kc, vc = cache_read_quant(new_cache, k.dtype)
+        else:
+            new_cache = _cache_write_one(cache, k, v, positions[:, 0])
+            kc, vc = new_cache["k"], new_cache["v"]
+        out = decode_attention(q, kc, vc,
+                               new_cache["pos"], positions[:, 0],
+                               window=window, softcap=cfg.attn_logit_softcap)
+    else:
+        out = attention(q, k, v, causal=causal, window=window,
+                        q_positions=positions, kv_positions=positions,
+                        chunk=cfg.attn_chunk, softcap=cfg.attn_logit_softcap,
+                        mesh=mesh)
+        if mode == "prefill" and cache is not None:
+            new_cache = _cache_write_full(cache, k_cache, v_cache,
+                                          positions)
+
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return x + o, new_cache
+
+
+def cross_attn_sublayer(x, p, cfg, mesh, enc_out=None, cross_kv=None):
+    """Cross attention: kv from encoder output (train/prefill) or from the
+    precomputed cross cache (decode)."""
+    h = _norm(x, p, cfg)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    if cross_kv is None:
+        k = jnp.einsum("bfd,dhk->bfhk", enc_out, p["wk"])
+        v = jnp.einsum("bfd,dhk->bfhk", enc_out, p["wv"])
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+    else:
+        k, v = cross_kv["k"], cross_kv["v"]
+    F = k.shape[1]
+    fpos = jnp.broadcast_to(jnp.arange(F)[None], (k.shape[0], F))
+    if x.shape[1] == 1:  # decode
+        out = decode_attention(q, k, v, fpos,
+                               jnp.full((x.shape[0],), F, jnp.int32))
+    else:
+        qpos = jnp.broadcast_to(
+            jnp.full((x.shape[1],), F, jnp.int32)[None], x.shape[:2])
+        out = attention(q, k, v, causal=False, q_positions=qpos,
+                        kv_positions=fpos, chunk=cfg.attn_chunk, mesh=mesh)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return x + o, {"k": k, "v": v}
+
+
+def mlp_sublayer(x, p, cfg, mesh):
+    h = _norm(x, p, cfg)
+    if "w1" in p:                                    # GELU (whisper)
+        h = gelu(jnp.einsum("bsd,df->bsf", h, p["w1"]) + p["b1"])
+        h = constrain(h, mesh, "batch", None, "ffn")
+        o = jnp.einsum("bsf,fd->bsd", h, p["w2"]) + p["b2"]
+    else:                                            # SwiGLU
+        g = jnp.einsum("bsd,df->bsf", h, p["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", h, p["w_up"])
+        g = constrain(g, mesh, "batch", None, "ffn")
+        o = jnp.einsum("bsf,fd->bsd", silu(g) * u, p["w_down"])
+    return x + o
+
+
+def moe_sublayer(x, p, cfg, mesh):
+    B, S, d = x.shape
+    h = _norm(x, {"norm": p["norm"]}, cfg)
+    sub = {"router": p["router"], "w_gate": p["w_gate"],
+           "w_up": p["w_up"], "w_down": p["w_down"]}
+    if cfg.moe_impl == "shard_map_local":
+        from repro.models.moe_sharded import moe_block_sharded
+        y, aux = moe_block_sharded(h.reshape(B * S, d), sub, cfg, mesh)
+    else:
+        y, aux = moe_block(h.reshape(B * S, d), sub, cfg, mesh)
+    return x + y.reshape(B, S, d), aux
+
+
+def ssm_sublayer(x, p, cfg, mesh, *, state=None, mode="train"):
+    h = _norm(x, {"norm": p["norm_in"]}, cfg)
+    if mode == "decode":
+        y, new_state = ssm_mod.ssm_decode_step(h, p, cfg, state)
+        return x + y, new_state
+    init = None if state is None else state["ssm"]
+    conv = (None if state is None else
+            {"x": state["conv_x"], "B": state["conv_B"],
+             "C": state["conv_C"]})
+    y, (ssm_state, conv_states) = ssm_mod.ssm_forward(h, p, cfg, init, conv)
+    new_state = {"ssm": ssm_state, "conv_x": conv_states["x"],
+                 "conv_B": conv_states["B"], "conv_C": conv_states["C"]}
+    return x + y, new_state
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg, mode):
+    if cfg.remat and mode in ("train", "prefill"):
+        return jax.checkpoint(fn)
+    return fn
+
+
+def _run_layers(body, init_carry, xs, cfg, mode):
+    """scan(body) over stacked layer params, or an unrolled python loop when
+    cfg.scan_layers=False.
+
+    The unrolled path exists for the dry-run cost probes: XLA's
+    HloCostAnalysis counts a while-loop body ONCE regardless of trip count,
+    so roofline FLOPs/bytes are extracted from small UNROLLED variants
+    (L in {1,2}) and extrapolated linearly (launch/dryrun.py); the scanned
+    path stays the production compile.
+    """
+    body_w = _maybe_remat(body, cfg, mode)
+    if cfg.scan_layers:
+        return jax.lax.scan(body_w, init_carry, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    carry = init_carry
+    ys = []
+    for l in range(L):
+        xs_l = jax.tree.map(lambda x: x[l], xs)
+        carry, y = body_w(carry, xs_l)
+        ys.append(y)
+    if all(len(jax.tree.leaves(y)) == 0 for y in ys):
+        return carry, ys[0]
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked
+
+
+def dense_stack(x, layers, cfg, mesh, positions, mode="train", caches=None):
+    """layers: stacked params dict. caches: stacked (L, ...) or None.
+
+    Decode keeps the cache stack in the scan CARRY and updates it in place
+    per layer (dynamic_update_index on a loop carry aliases buffers) --
+    returning per-layer caches as scan ys would allocate a SECOND full KV
+    cache every step (§Perf, qwen decode iteration 2)."""
+    win = cfg.sliding_window
+
+    if mode == "decode" and caches is not None:
+        L = jax.tree.leaves(layers)[0].shape[0]
+
+        def dbody(carry, xs):
+            x, cstack = carry
+            lp, l = xs
+            cache_l = jax.tree.map(lambda c: c[l], cstack)
+            x, nc = attn_sublayer(x, lp["attn"], cfg, mesh, positions,
+                                  cache=cache_l, mode=mode, window=win)
+            x = mlp_sublayer(x, lp["mlp"], cfg, mesh)
+            cstack = jax.tree.map(
+                lambda cs, c: jax.lax.dynamic_update_index_in_dim(
+                    cs, c.astype(cs.dtype), l, 0), cstack, nc)
+            return (x, cstack), None
+
+        if cfg.scan_layers:
+            (x, new_caches), _ = jax.lax.scan(
+                dbody, (x, caches), (layers, jnp.arange(L)))
+        else:  # unrolled cost probes
+            carry = (x, caches)
+            for l in range(L):
+                carry, _ = dbody(carry, (jax.tree.map(lambda p: p[l],
+                                                      layers), l))
+            x, new_caches = carry
+        return x, new_caches, jnp.zeros((), jnp.float32)
+
+    def body(carry, xs):
+        x = carry
+        lp, cache_l = xs
+        x, nc = attn_sublayer(x, lp["attn"], cfg, mesh, positions,
+                              cache=cache_l, mode=mode, window=win)
+        x = mlp_sublayer(x, lp["mlp"], cfg, mesh)
+        x = constrain(x, mesh, "batch", None, None)
+        return x, nc
+
+    x, new_caches = _run_layers(body, x, (layers, caches), cfg, mode)
+    return x, new_caches, jnp.zeros((), jnp.float32)
+
+
+def moe_stack(x, layers, cfg, mesh, positions, mode="train", caches=None):
+    win = cfg.sliding_window
+
+    if mode == "decode" and caches is not None:   # in-place carry cache
+        L = jax.tree.leaves(layers)[0].shape[0]
+
+        def dbody(carry, xs):
+            x, cstack = carry
+            lp, l = xs
+            cache_l = jax.tree.map(lambda c: c[l], cstack)
+            x, nc = attn_sublayer(x, lp["attn"], cfg, mesh, positions,
+                                  cache=cache_l, mode=mode, window=win)
+            x, _ = moe_sublayer(x, lp["moe"], cfg, mesh)
+            cstack = jax.tree.map(
+                lambda cs, c: jax.lax.dynamic_update_index_in_dim(
+                    cs, c.astype(cs.dtype), l, 0), cstack, nc)
+            return (x, cstack), None
+
+        xs = (layers, jnp.arange(L))
+        if cfg.scan_layers:
+            (x, new_caches), _ = jax.lax.scan(dbody, (x, caches), xs)
+        else:
+            carry = (x, caches)
+            for l in range(L):
+                carry, _ = dbody(carry, jax.tree.map(lambda a: a[l], xs))
+            x, new_caches = carry
+        return x, new_caches, jnp.zeros((), jnp.float32)
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, cache_l = xs
+        x, nc = attn_sublayer(x, lp["attn"], cfg, mesh, positions,
+                              cache=cache_l, mode=mode, window=win)
+        x, a = moe_sublayer(x, lp["moe"], cfg, mesh)
+        x = constrain(x, mesh, "batch", None, None)
+        return (x, aux + a), nc
+
+    (x, aux), new_caches = _run_layers(
+        body, (x, jnp.zeros((), jnp.float32)), (layers, caches), cfg, mode)
+    return x, new_caches, aux / cfg.num_layers
+
+
+def ssm_stack(x, layers, cfg, mesh, positions, mode="train", states=None):
+    def body(carry, xs):
+        x = carry
+        lp, state_l = xs
+        x, ns = ssm_sublayer(x, lp["ssm"], cfg, mesh, state=state_l,
+                             mode=mode)
+        x = constrain(x, mesh, "batch", None, None)
+        return x, ns
+
+    x, new_states = _run_layers(body, x, (layers, states), cfg, mode)
+    return x, new_states, jnp.zeros((), jnp.float32)
+
+
+def hybrid_attn_layout(cfg):
+    """(is_attn (L,), attn_idx (L,), n_attn) -- which layers get the shared
+    attention block (every attn_every-th, Zamba2-style)."""
+    L, k = cfg.num_layers, cfg.attn_every
+    is_attn = np.zeros((L,), bool)
+    if k:
+        is_attn[k - 1::k] = True
+    attn_idx = np.cumsum(is_attn) - 1
+    attn_idx = np.where(is_attn, attn_idx, 0).astype(np.int32)
+    return is_attn, attn_idx, int(is_attn.sum())
+
+
+def hybrid_stack(x, layers, shared, cfg, mesh, positions, mode="train",
+                 states=None, attn_caches=None):
+    """Mamba2 layers + ONE shared attn+MLP block applied every k layers.
+
+    attn_caches: stacked (n_attn, B, C, KV, hd) pytree (decode/prefill).
+    states: stacked (L, ...) ssm states or None (train).
+    """
+    is_attn, attn_idx, n_attn = hybrid_attn_layout(cfg)
+    win = cfg.sliding_window
+
+    def shared_block(x, cache_l):
+        x, nc = attn_sublayer(x, shared["attn"], cfg, mesh, positions,
+                              cache=cache_l, mode=mode, window=win)
+        x = mlp_sublayer(x, shared["mlp"], cfg, mesh)
+        return x, nc
+
+    def body(carry, xs):
+        x, caches = carry
+        lp, state_l, flag, idx = xs
+        x, ns = ssm_sublayer(x, lp["ssm"], cfg, mesh, state=state_l,
+                             mode=mode)
+        static_flag = isinstance(flag, (bool, np.bool_))
+        if n_attn == 0:                          # no shared-block layer at
+            x = constrain(x, mesh, "batch", None, None)   # this depth (e.g.
+            return (x, caches), ns               # L<attn_every cost probes)
+        if caches is None:                       # train: cond on x only
+            if static_flag:                      # unrolled: no dead branch
+                x = shared_block(x, None)[0] if flag else x
+            else:
+                x = jax.lax.cond(flag, lambda v: shared_block(v, None)[0],
+                                 lambda v: v, x)
+        else:
+            cache_l = jax.tree.map(lambda c: c[idx], caches)
+            if static_flag:
+                x, nc = shared_block(x, cache_l) if flag else (x, cache_l)
+            else:
+                x, nc = jax.lax.cond(
+                    flag, lambda v, c: shared_block(v, c),
+                    lambda v, c: (v, c), x, cache_l)
+            caches = jax.tree.map(
+                lambda cs, c: jax.lax.dynamic_update_index_in_dim(
+                    cs, c, idx, 0), caches, nc)
+        x = constrain(x, mesh, "batch", None, None)
+        return (x, caches), ns
+
+    # unrolled cost probes get STATIC flags (a traced lax.cond would make
+    # HloCostAnalysis count the attn branch for every layer)
+    if cfg.scan_layers:
+        flags, idxs = jnp.asarray(is_attn), jnp.asarray(attn_idx)
+    else:
+        flags, idxs = is_attn, attn_idx
+    xs = (layers, states, flags, idxs)
+    (x, new_attn_caches), new_states = _run_layers(
+        body, (x, attn_caches), xs, cfg, mode)
+    return x, new_states, new_attn_caches, jnp.zeros((), jnp.float32)
+
+
+def encoder_stack(x, layers, cfg, mesh, positions):
+    def body(carry, lp):
+        x = carry
+        x, _ = attn_sublayer(x, lp["attn"], cfg, mesh, positions,
+                             mode="train", causal=False, rope=False)
+        x = mlp_sublayer(x, lp["mlp"], cfg, mesh)
+        return x, None
+
+    x, _ = _run_layers(body, x, layers, cfg, "train")
+    return x
+
+
+def decoder_stack(x, layers, cfg, mesh, positions, enc_out=None,
+                  mode="train", caches=None, cross_kv=None):
+    """Whisper decoder: causal self-attn + cross-attn + GELU MLP.
+
+    cross_kv: stacked (L, B, F, KV, hd) precomputed at prefill (decode mode);
+    enc_out: (B, F, d) encoder output (train/prefill).
+
+    Decode uses the in-place carry-cache pattern (see dense_stack): the
+    self-attn cache stack lives in the carry, and the READ-ONLY cross_kv is
+    consumed from xs without being re-stacked as ys (the baseline re-stacked
+    a full cross cache copy per token -- §Perf qwen it.2, same pathology).
+    """
+    if mode == "decode" and caches is not None:
+        L = jax.tree.leaves(layers)[0].shape[0]
+
+        def dbody(carry, xs):
+            x, cstack = carry
+            lp, ckv_l, l = xs
+            cache_l = jax.tree.map(lambda c: c[l], cstack)
+            x, nc = attn_sublayer(x, lp["attn"], cfg, mesh, positions,
+                                  cache=cache_l, mode=mode, rope=False)
+            x, _ = cross_attn_sublayer(x, lp["cross"], cfg, mesh,
+                                       enc_out=enc_out, cross_kv=ckv_l)
+            x = mlp_sublayer(x, lp["mlp"], cfg, mesh)
+            cstack = jax.tree.map(
+                lambda cs, c: jax.lax.dynamic_update_index_in_dim(
+                    cs, c.astype(cs.dtype), l, 0), cstack, nc)
+            return (x, cstack), None
+
+        xs = (layers, cross_kv, jnp.arange(L))
+        if cfg.scan_layers:
+            (x, new_caches), _ = jax.lax.scan(dbody, (x, caches), xs)
+        else:
+            carry = (x, caches)
+            for l in range(L):
+                carry, _ = dbody(carry, jax.tree.map(lambda a: a[l], xs))
+            x, new_caches = carry
+        return x, new_caches, cross_kv
+
+    def body(carry, xs):
+        x = carry
+        lp, cache_l, ckv_l = xs
+        x, nc = attn_sublayer(x, lp["attn"], cfg, mesh, positions,
+                              cache=cache_l, mode=mode, rope=False)
+        x, ckv = cross_attn_sublayer(x, lp["cross"], cfg, mesh,
+                                     enc_out=enc_out, cross_kv=ckv_l)
+        x = mlp_sublayer(x, lp["mlp"], cfg, mesh)
+        return x, (nc, ckv)
+
+    x, (new_caches, new_ckv) = _run_layers(
+        body, x, (layers, caches, cross_kv), cfg, mode)
+    return x, new_caches, new_ckv

@@ -1,0 +1,8 @@
+"""Optimizers: AdamW + SophiaH (CHESSFAD chunked-HVP curvature)."""
+
+from repro.optim.optimizers import (OPTIMIZERS, Optimizer, adamw, sophia_h,
+                                    global_norm, clip_by_global_norm)
+from repro.optim.schedule import warmup_cosine
+
+__all__ = ["OPTIMIZERS", "Optimizer", "adamw", "sophia_h", "global_norm",
+           "clip_by_global_norm", "warmup_cosine"]

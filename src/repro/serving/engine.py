@@ -1,0 +1,140 @@
+"""Batched serving engine: slot-based continuous batching over the decode
+step.
+
+A fixed pool of ``max_batch`` slots shares one decode-state pytree (the
+layout the decode_* dry-run cells lower). Requests queue up; free slots are
+prefilled (one request at a time -- prefill is full-sequence) and then all
+active slots decode in lockstep, each with its own position counter. Greedy
+or temperature sampling per slot. Finished slots (EOS or max_new_tokens)
+free immediately and the queue refills them -- tokens keep flowing at
+batch occupancy.
+
+Single-slot prefill writes into the shared state via jax.tree-indexed
+dynamic updates, so the engine never re-allocates caches.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import (decode_step, forward, init_decode_state)
+
+__all__ = ["Request", "ServingEngine"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (len,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, params, cfg, *, max_batch: int = 4,
+                 max_seq: int = 512, mesh=None, temperature: float = 0.0,
+                 seed: int = 0):
+        self.params, self.cfg, self.mesh = params, cfg, mesh
+        self.B, self.S = max_batch, max_seq
+        self.state = init_decode_state(cfg, max_batch, max_seq)
+        self.pos = np.zeros((max_batch,), np.int32)
+        self.slot_req: list[Optional[Request]] = [None] * max_batch
+        self.queue: list[Request] = []
+        self.temperature = temperature
+        self._rng = jax.random.PRNGKey(seed)
+        self._next_rid = 0
+
+        # jitted single-slot prefill: RESETS the slot (previous occupant's
+        # SSM state / cache positions must not leak into a new request),
+        # computes caches, and writes them into slot b of the shared state.
+        def _prefill_into(state, params, tokens, slot):
+            sub = jax.tree.map(
+                lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1),
+                state)
+            sub = jax.tree_util.tree_map_with_path(
+                lambda kp, c: jnp.full_like(c, -1)
+                if jax.tree_util.keystr(kp).endswith("'pos']") else
+                jnp.zeros_like(c), sub)
+            logits, _, new_sub = forward(params, cfg, {"tokens": tokens},
+                                         mesh, mode="prefill", state=sub)
+            merged = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_slice_in_dim(
+                    c, n.astype(c.dtype), slot, axis=1), state, new_sub)
+            return logits[:, -1], merged
+
+        self._prefill = jax.jit(_prefill_into, static_argnums=())
+        self._decode = jax.jit(
+            lambda params, toks, pos, state: decode_step(
+                params, cfg, toks, pos, state, mesh))
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, prompt, max_new_tokens=16, eos_id=None) -> Request:
+        req = Request(self._next_rid, np.asarray(prompt, np.int32),
+                      max_new_tokens, eos_id)
+        self._next_rid += 1
+        self.queue.append(req)
+        return req
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        """Drive until queue and slots drain. Returns finished requests."""
+        self._finished: list[Request] = []
+        finished = self._finished
+        last_token = np.zeros((self.B,), np.int32)
+        for _ in range(max_steps):
+            self._fill_slots(last_token)
+            active = [i for i, r in enumerate(self.slot_req) if r is not None]
+            if not active:
+                if self.queue:      # slots freed at prefill-time EOS
+                    continue
+                break
+            toks = jnp.asarray(last_token[:, None])
+            pos = jnp.asarray(self.pos)
+            logits, self.state = self._decode(self.params, toks, pos,
+                                              self.state)
+            nxt = self._sample(logits)
+            for i in active:
+                req = self.slot_req[i]
+                tok = int(nxt[i])
+                req.out_tokens.append(tok)
+                last_token[i] = tok
+                self.pos[i] += 1
+                if (req.eos_id is not None and tok == req.eos_id) or \
+                        len(req.out_tokens) >= req.max_new_tokens:
+                    req.done = True
+                    finished.append(req)
+                    self.slot_req[i] = None
+        return finished
+
+    # -- internals ----------------------------------------------------------
+    def _sample(self, logits) -> np.ndarray:
+        if self.temperature <= 0.0:
+            return np.asarray(jnp.argmax(logits, -1))
+        self._rng, k = jax.random.split(self._rng)
+        return np.asarray(jax.random.categorical(
+            k, logits / self.temperature, axis=-1))
+
+    def _fill_slots(self, last_token: np.ndarray):
+        for i in range(self.B):
+            if self.slot_req[i] is None and self.queue:
+                req = self.queue.pop(0)
+                toks = jnp.asarray(req.prompt[None, :])
+                logits, self.state = self._prefill(self.state, self.params,
+                                                   toks, i)
+                nxt = int(self._sample(logits)[0])
+                req.out_tokens.append(nxt)
+                # the prefill-produced token can already terminate
+                if (req.eos_id is not None and nxt == req.eos_id) or \
+                        req.max_new_tokens <= 1:
+                    req.done = True
+                    self._finished.append(req)
+                    continue
+                last_token[i] = nxt
+                self.pos[i] = len(req.prompt)
+                self.slot_req[i] = req

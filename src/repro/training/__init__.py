@@ -1,0 +1,5 @@
+from repro.training.steps import TrainState, make_train_step, state_shardings
+from repro.training.loop import TrainLoop, TrainLoopConfig
+
+__all__ = ["TrainState", "make_train_step", "state_shardings", "TrainLoop",
+           "TrainLoopConfig"]

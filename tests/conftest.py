@@ -1,0 +1,11 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS manipulation here -- smoke tests and
+benches must see the single real CPU device; only launch/dryrun.py (run as
+its own process) fakes 512 devices."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,112 @@
+"""CHESSFAD public API vs JAX oracles: full Hessians, HVPs, the L0/L1/L2
+batched schedules (paper Algs. 2-10), and the §5 op-count bookkeeping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import api, ref, testfns
+from repro.core.api import (batched_hvp, chunk_pairs, gradient, hessian, hvp,
+                            num_chunk_evals, optimal_csize)
+
+FN = {
+    "rosenbrock": lambda n: testfns.rosenbrock,
+    "ackley": lambda n: testfns.ackley,
+    "fletcher_powell": testfns.make_fletcher_powell,
+}
+
+
+@pytest.mark.parametrize("fname", sorted(FN))
+@pytest.mark.parametrize("n,csize", [(4, 1), (8, 2), (8, 8), (6, 4)])
+@pytest.mark.parametrize("symmetric", [False, True])
+def test_hessian_matches_jax(fname, n, csize, symmetric):
+    f = FN[fname](n)
+    a = testfns.sample_point(n, seed=n + csize)
+    H = hessian(f, a, csize=csize, symmetric=symmetric)
+    H_ref = ref.hessian_fwdrev(f, a)
+    np.testing.assert_allclose(np.asarray(H), np.asarray(H_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("fname", sorted(FN))
+@pytest.mark.parametrize("n,csize", [(8, 2), (8, 4), (12, 3)])
+@pytest.mark.parametrize("symmetric", [False, True])
+def test_hvp_matches_jax(fname, n, csize, symmetric):
+    f = FN[fname](n)
+    a = testfns.sample_point(n, seed=1)
+    v = testfns.sample_point(n, seed=2)
+    r = hvp(f, a, v, csize=csize, symmetric=symmetric)
+    r_ref = ref.hvp_fwdrev(f, a, v)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(r_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_gradient_matches_jax():
+    n = 10
+    f = FN["ackley"](n)
+    a = testfns.sample_point(n, seed=3)
+    g = gradient(f, a, csize=4)
+    np.testing.assert_allclose(np.asarray(g),
+                               np.asarray(jax.grad(f)(a)), rtol=1e-3,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("level", ["L0", "L1", "L2"])
+def test_batched_levels_agree(level):
+    n, m, csize = 8, 6, 2
+    f = FN["rosenbrock"](n)
+    rng = np.random.RandomState(0)
+    A = jnp.asarray(rng.uniform(-2, 2, (m, n)), jnp.float32)
+    V = jnp.asarray(rng.randn(m, n), jnp.float32)
+    out = batched_hvp(f, A, V, csize=csize, level=level)
+    want = jnp.stack([ref.hvp_fwdrev(f, A[i], V[i]) for i in range(m)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_hvp_fwdfwd_oracle_agrees():
+    n = 8
+    f = FN["rosenbrock"](n)
+    a = testfns.sample_point(n, seed=5)
+    v = testfns.sample_point(n, seed=6)
+    np.testing.assert_allclose(np.asarray(ref.hvp_fwdfwd(f, a, v)),
+                               np.asarray(ref.hvp_fwdrev(f, a, v)),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# §5 bookkeeping
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from([1, 2, 4, 8]), st.integers(1, 8))
+def test_chunk_count_formulas(csize, mult):
+    """Paper §5: symmetric scheme evaluates n*(n/csize+1)/2 chunks; the
+    plain scheme n^2/csize, when csize | n."""
+    n = csize * mult
+    assert num_chunk_evals(n, csize, False) == n * n // csize
+    assert num_chunk_evals(n, csize, True) == n * (n // csize + 1) // 2
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6))
+def test_optimal_csize_near_sqrt_half_n(k):
+    """Paper §5: scalar multiplies of SCHUNK-HESS are minimized at
+    csize = sqrt(n/2); for n = 2^(2k+1) that's exactly 2^k."""
+    n = 2 ** (2 * k + 1)
+    assert optimal_csize(n) == 2 ** k
+
+
+def test_chunk_pairs_cover_upper_triangle():
+    n, csize = 8, 2
+    pairs = chunk_pairs(n, csize, symmetric=True)
+    seen = set()
+    for i, c in pairs:
+        for l in range(csize):
+            seen.add((int(i), int(c) + l))
+    # every (i, j) with chunk(j) >= chunk(i) must be covered
+    for i in range(n):
+        for j in range((i // csize) * csize, n):
+            assert (i, j) in seen

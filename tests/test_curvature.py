@@ -1,0 +1,95 @@
+"""LM-scale curvature engine: block Hessians via the hDual path and the
+chunked fwd-fwd fallback, both against jax.hessian."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.hmath as hm
+from repro.core.curvature import block_hessian, pytree_hvp
+
+
+def test_block_hessian_hmath_native():
+    """An hmath-native objective exercises the verbatim hDual algorithm."""
+    params = {"block": jnp.asarray([0.3, -0.5, 1.2, 0.1]),
+              "other": jnp.asarray([2.0])}
+
+    def f(p):
+        x = p["block"]
+        return hm.sum(hm.sin(x * p["other"][0]) * x)
+
+    H = block_hessian(f, params, "block", csize=2)
+    H_ref = jax.hessian(lambda b: f({"block": b, "other":
+                                     params["other"]}))(params["block"])
+    np.testing.assert_allclose(np.asarray(H), np.asarray(H_ref), rtol=1e-3,
+                               atol=1e-4)
+
+
+def test_block_hessian_generic_jnp_fallback():
+    """A jnp-native objective (softmax xent head) falls back to the chunked
+    forward-over-forward path with the SAME (row, chunk) schedule."""
+    rng = np.random.RandomState(0)
+    W = jnp.asarray(rng.randn(4, 3), jnp.float32)
+    x = jnp.asarray(rng.randn(4), jnp.float32)
+    params = {"logits_bias": jnp.zeros((3,)), "W": W}
+
+    def f(p):
+        logits = x @ p["W"] + p["logits_bias"]
+        return -jax.nn.log_softmax(logits)[1]
+
+    H = block_hessian(f, params, "logits_bias", csize=2, symmetric=True)
+    H_ref = jax.hessian(
+        lambda b: f({"logits_bias": b, "W": W}))(params["logits_bias"])
+    np.testing.assert_allclose(np.asarray(H), np.asarray(H_ref), rtol=1e-3,
+                               atol=1e-4)
+
+
+def test_block_hessian_on_lm_norm_scale():
+    """Small-but-real: the Hessian of an actual reduced-LM loss w.r.t. the
+    final_norm scale, validated against jax.hessian."""
+    from repro.configs import get_config
+    from repro.models.model import loss_fn, make_batch
+    from repro.models.params import init_params
+
+    cfg = get_config("qwen1.5-4b", reduced=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 1, 8)
+
+    def f(p):
+        return loss_fn(p, cfg, batch)[0]
+
+    H = block_hessian(f, params, "final_norm", csize=8, symmetric=True)
+    flatW = params["final_norm"]
+
+    def f_of_block(b):
+        p2 = dict(params)
+        p2["final_norm"] = b
+        return f(p2)
+
+    H_ref = jax.hessian(f_of_block)(flatW)
+    np.testing.assert_allclose(np.asarray(H), np.asarray(H_ref), rtol=5e-2,
+                               atol=5e-4)
+
+
+def test_pytree_hvp_on_lm_loss():
+    from repro.configs import get_config
+    from repro.models.model import loss_fn, make_batch
+    from repro.models.params import init_params
+    from repro.core.curvature import rademacher_like
+
+    cfg = get_config("minitron-4b", reduced=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 1, 8)
+    f = lambda p: loss_fn(p, cfg, batch)[0]
+    v = rademacher_like(jax.random.PRNGKey(1), params)
+    hv = pytree_hvp(f, params, v)
+    assert all(bool(jnp.isfinite(l.astype(jnp.float32)).all())
+               for l in jax.tree.leaves(hv))
+    # directional symmetry: v^T (H w) == w^T (H v)
+    w = rademacher_like(jax.random.PRNGKey(2), params)
+    hw = pytree_hvp(f, params, w)
+    a = sum((x * y).sum() for x, y in
+            zip(jax.tree.leaves(v), jax.tree.leaves(hw)))
+    b = sum((x * y).sum() for x, y in
+            zip(jax.tree.leaves(w), jax.tree.leaves(hv)))
+    np.testing.assert_allclose(float(a), float(b), rtol=2e-2, atol=2e-3)

@@ -1,0 +1,116 @@
+"""§Perf optimization paths must be semantically equivalent to the baseline:
+repeat-KV GQA, shard_map-local MoE, seq-sharded decode cache."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import (decode_step, forward, init_decode_state,
+                                loss_fn, make_batch, prefill)
+from repro.models.params import init_params
+
+
+@pytest.mark.parametrize("arch", ["deepseek-67b", "h2o-danube-1.8b",
+                                  "granite-moe-1b-a400m"])
+def test_repeat_kv_equivalence(arch):
+    cfg = get_config(arch, reduced=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 2, 32)
+    l0, _ = loss_fn(params, cfg, batch)
+    l1, _ = loss_fn(params, dataclasses.replace(cfg, gqa_repeat_kv=True),
+                    batch)
+    assert abs(float(l0) - float(l1)) < 1e-5
+
+
+def test_repeat_kv_prefill_cache_still_kv_heads():
+    """Caches must store KV (not H) heads under repeat_kv, and decode must
+    still agree with the full forward."""
+    cfg = dataclasses.replace(get_config("deepseek-67b", reduced=True),
+                              gqa_repeat_kv=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S, Sp = 2, 16, 12
+    batch = make_batch(cfg, B, S)
+    logits_full, _, _ = forward(params, cfg, batch, mode="train")
+    state = init_decode_state(cfg, B, max_seq=S)
+    assert state["layer_caches"]["k"].shape[3] == cfg.num_kv_heads
+    lg, state = prefill(params, cfg, {"tokens": batch["tokens"][:, :Sp]},
+                        state)
+    np.testing.assert_allclose(np.asarray(lg),
+                               np.asarray(logits_full[:, Sp - 1]),
+                               rtol=1e-4, atol=1e-4)
+    for i in range(Sp, S):
+        lg, state = decode_step(params, cfg, batch["tokens"][:, i:i + 1],
+                                jnp.full((B,), i, jnp.int32), state)
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(logits_full[:, i]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_moe_shard_map_falls_back_on_indivisible_experts():
+    """granite-3b: 40 experts on any model axis that doesn't divide ->
+    must route through the GSPMD implementation, not crash."""
+    cfg = dataclasses.replace(get_config("granite-moe-3b-a800m",
+                                         reduced=True),
+                              moe_impl="shard_map_local")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 2, 16)
+    loss, _ = loss_fn(params, cfg, batch)   # mesh=None -> fallback path
+    assert bool(jnp.isfinite(loss))
+
+
+def test_moe_shard_map_equivalence_fake_devices():
+    """Exact output equality vs the GSPMD sort dispatch on a (4,2) mesh
+    (capacity_factor high enough that no tokens drop)."""
+    from tests.test_distributed import run_with_fake_devices
+    run_with_fake_devices("""
+        import dataclasses, jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.models.moe import moe_block
+        from repro.models.moe_sharded import moe_block_sharded
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        cfg = dataclasses.replace(
+            get_config("granite-moe-1b-a400m", reduced=True),
+            capacity_factor=4.0)
+        rng = np.random.RandomState(0)
+        T, d = 64, cfg.d_model
+        x = jnp.asarray(rng.randn(T, d) * 0.5, jnp.float32)
+        E, ff = cfg.num_experts, cfg.moe_d_ff
+        params = {k: jnp.asarray(rng.randn(*s) * 0.1, jnp.float32)
+                  for k, s in [("router", (d, E)), ("w_gate", (E, d, ff)),
+                               ("w_up", (E, d, ff)), ("w_down", (E, ff, d))]}
+        y0, _ = jax.jit(lambda x, p: moe_block(x, p, cfg, mesh))(x, params)
+        y1, _ = jax.jit(lambda x, p: moe_block_sharded(x, p, cfg, mesh))(
+            x, params)
+        assert float(jnp.abs(y0 - y1).max()) < 1e-5
+        g = jax.grad(lambda p: moe_block_sharded(x, p, cfg, mesh)[0].sum())(
+            params)
+        assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(g))
+        print("MOE_SMAP_OK")
+    """)
+
+
+def test_shard_cache_seq_decode_consistency():
+    """Seq-sharded cache flag must not change single-device decode results
+    (sharding is a layout annotation, not semantics)."""
+    for flag in (False, True):
+        cfg = dataclasses.replace(get_config("qwen1.5-4b", reduced=True),
+                                  shard_cache_seq=flag)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        B, S, Sp = 1, 16, 12
+        batch = make_batch(cfg, B, S)
+        logits_full, _, _ = forward(params, cfg, batch, mode="train")
+        state = init_decode_state(cfg, B, max_seq=S)
+        lg, state = prefill(params, cfg,
+                            {"tokens": batch["tokens"][:, :Sp]}, state)
+        for i in range(Sp, S):
+            lg, state = decode_step(params, cfg,
+                                    batch["tokens"][:, i:i + 1],
+                                    jnp.full((B,), i, jnp.int32), state)
+            np.testing.assert_allclose(
+                np.asarray(lg), np.asarray(logits_full[:, i]), rtol=1e-4,
+                atol=1e-4)

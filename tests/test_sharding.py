@@ -1,0 +1,78 @@
+"""Sharding rule engine: greedy assignment, divisibility fallback, and the
+param-spec coverage of every assigned architecture on the production mesh
+shapes (AbstractMesh -- no devices needed)."""
+
+import jax
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models.params import param_table
+from repro.parallel.sharding import (ACTIVATION_RULES, PARAM_RULES,
+                                     spec_for)
+
+MESH1 = AbstractMesh((16, 16), ("data", "model"))
+MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_tp_dims_go_to_model():
+    spec = spec_for((8192, 64, 128), ("embed", "heads", "head_dim"), MESH1,
+                    PARAM_RULES)
+    assert spec == P("data", "model", None)
+
+
+def test_divisibility_fallback_replicates():
+    # 40 experts on a 16-wide model axis -> replicate, ffn takes model
+    spec = spec_for((40, 1536, 512), ("experts", "embed", "expert_ffn"),
+                    MESH1, PARAM_RULES)
+    assert spec == P(None, "data", "model")
+    # 32 experts divide -> experts get model, ffn falls back to replicated
+    spec = spec_for((32, 1024, 512), ("experts", "embed", "expert_ffn"),
+                    MESH1, PARAM_RULES)
+    assert spec == P("model", "data", None)
+
+
+def test_no_axis_reuse_within_tensor():
+    spec = spec_for((1024, 1024), ("embed", "embed"), MESH1, PARAM_RULES)
+    assert spec == P("data", None)  # second dim cannot reuse "data"
+
+
+def test_batch_spans_pod_and_data():
+    spec = spec_for((256, 4096), ("batch", None), MESH2, ACTIVATION_RULES)
+    assert spec == P(("pod", "data"), None)
+    # batch=1 (long_500k): indivisible -> replicated
+    spec = spec_for((1, 524288), ("batch", None), MESH2, ACTIVATION_RULES)
+    assert spec == P(None, None)
+
+
+def test_kv_heads_indivisible_fallback():
+    # kv=8 on model=16 -> replicated (GQA small-kv case)
+    spec = spec_for((2048, 8, 128), ("embed", "kv_heads", "head_dim"),
+                    MESH1, PARAM_RULES)
+    assert spec == P("data", None, None)
+
+
+def test_every_arch_param_table_shardable_both_meshes():
+    """spec_for must succeed (possibly replicating) for EVERY parameter of
+    EVERY assigned arch on both production meshes, and every TP-eligible
+    matrix of the dense archs must actually get the model axis."""
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for mesh in (MESH1, MESH2):
+            for path, ps in param_table(cfg).items():
+                spec = spec_for(ps.shape, ps.logical, mesh, PARAM_RULES)
+                assert len(spec) == len(ps.shape), (arch, path)
+                # no axis used twice
+                used = [a for a in jax.tree.leaves(tuple(spec))
+                        if a is not None]
+                flat = []
+                for a in used:
+                    flat.extend(a if isinstance(a, tuple) else (a,))
+                assert len(flat) == len(set(flat)), (arch, path, spec)
+
+
+def test_dense_ffn_sharded_on_model():
+    cfg = get_config("deepseek-67b")
+    t = param_table(cfg)
+    spec = spec_for(t["layers/mlp/w_gate"].shape,
+                    t["layers/mlp/w_gate"].logical, MESH1, PARAM_RULES)
+    assert "model" in str(spec)

@@ -1,0 +1,113 @@
+"""Fault-tolerant loop: resume, retry-after-failure, NaN handling,
+straggler telemetry."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import make_batch
+from repro.models.params import init_params
+from repro.optim import adamw
+from repro.optim.schedule import constant
+from repro.training import (TrainLoop, TrainLoopConfig, TrainState,
+                            make_train_step)
+
+
+def build(tmp_path, total=10, ckpt_every=3, **loop_kw):
+    cfg = get_config("minitron-4b", reduced=True)
+    opt = adamw(constant(1e-3))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32),
+                       jax.random.PRNGKey(1))
+    step = make_train_step(cfg, None, opt)
+    batch_fn = lambda s: make_batch(cfg, 2, 16, jax.random.PRNGKey(s))
+    lc = TrainLoopConfig(total_steps=total, ckpt_dir=str(tmp_path),
+                         ckpt_every=ckpt_every, async_ckpt=False, **loop_kw)
+    return lc, step, batch_fn, state
+
+
+def test_recovers_from_injected_failure(tmp_path):
+    lc, step, batch_fn, state = build(tmp_path)
+    boom = {"armed": True}
+
+    def flaky(s, b):
+        if boom["armed"] and int(s.step) == 7:
+            boom["armed"] = False
+            raise RuntimeError("injected node failure")
+        return step(s, b)
+
+    loop = TrainLoop(lc, flaky, batch_fn, state)
+    res = loop.run()
+    assert res["final_step"] == 10
+    assert not boom["armed"]
+    steps = [m["step"] for m in res["metrics"]]
+    assert 7 in steps  # step 7 was re-run after restore
+
+
+def test_resume_from_checkpoint(tmp_path):
+    lc, step, batch_fn, state = build(tmp_path, total=6, ckpt_every=3)
+    loop = TrainLoop(lc, step, batch_fn, state)
+    loop.run()
+    # new loop instance (fresh process semantics) resumes at 6, runs to 9
+    lc2, step2, batch_fn2, state2 = build(tmp_path, total=9, ckpt_every=3)
+    loop2 = TrainLoop(lc2, step2, batch_fn2, state2)
+    start = loop2.maybe_resume()
+    assert start == 6
+    assert int(loop2.state.step) == 6
+    res = loop2.run(start_step=start)
+    assert res["final_step"] == 9
+
+
+def test_nan_loss_triggers_restore(tmp_path):
+    lc, step, batch_fn, state = build(tmp_path, total=8, ckpt_every=2)
+    poisoned = {"armed": True}
+
+    def poison(s, b):
+        trigger = poisoned["armed"] and int(s.step) == 5  # read BEFORE the
+        s2, m = step(s, b)                                # step donates s
+        if trigger:
+            poisoned["armed"] = False
+            m = dict(m, loss=jnp.asarray(float("nan")))
+        return s2, m
+
+    loop = TrainLoop(lc, poison, batch_fn, state)
+    res = loop.run()
+    assert res["final_step"] == 8
+    losses = [m.get("loss") for m in res["metrics"] if "loss" in m]
+    assert all(l == l for l in losses)  # no NaN made it into the log
+
+
+def test_bounded_retries(tmp_path):
+    lc, step, batch_fn, state = build(tmp_path, total=5, max_retries=2)
+
+    def always_fails(s, b):
+        raise RuntimeError("dead node")
+
+    loop = TrainLoop(lc, always_fails, batch_fn, state)
+    with pytest.raises(RuntimeError, match="dead node"):
+        loop.run()
+
+
+def test_straggler_detection(tmp_path):
+    lc, step, batch_fn, state = build(tmp_path, total=8,
+                                      straggler_factor=2.0)
+    seen = []
+    holder = {}
+
+    def slow_at_6(s, b):
+        # sleep relative to the loop's own EMA so the test is robust to
+        # machine-load variation
+        if int(s.step) == 6 and holder["loop"]._ema is not None:
+            time.sleep(5.0 * holder["loop"]._ema + 0.2)
+        return step(s, b)
+
+    loop = TrainLoop(lc, slow_at_6, batch_fn, state,
+                     on_straggler=lambda st, dt, ema: seen.append(st))
+    holder["loop"] = loop
+    res = loop.run()
+    assert 6 in [s for s, _ in res["stragglers"]]
+    assert 6 in seen
