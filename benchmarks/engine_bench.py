@@ -1,0 +1,91 @@
+"""CurvatureEngine planning benchmark: engine-selected csize ("auto", the
+§5 op model) vs. every fixed csize, plus plan/cache overhead -- seeds the
+perf trajectory for the engine era.
+
+Writes ``BENCH_pr1.json`` (repo root or $BENCH_OUT) with per-(function, n)
+records: the auto pick, the measured best, their timings, and the regret
+ratio auto/best.  CI uploads the file as an artifact.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro import engine
+from repro.core import testfns
+
+NS = (8, 16, 32)
+FUNCS = ("rosenbrock", "ackley")
+M = 256
+
+
+def run(ns=NS, funcs=FUNCS, m=M, out_path=None):
+    records = []
+    rng = np.random.RandomState(0)
+    for fname in funcs:
+        for n in ns:
+            f = testfns.FUNCTIONS[fname](n)
+            A = jnp.asarray(rng.uniform(-2, 2, (m, n)), jnp.float32)
+            V = jnp.asarray(rng.randn(m, n), jnp.float32)
+
+            timings = {}
+            for c in engine.csize_candidates(n):
+                p = engine.plan(f, n, m=m, csize=c, symmetric=False)
+                timings[c] = time_fn(p.batched_hvp, A, V)
+
+            auto = engine.plan(f, n, m=m, csize="auto",
+                               symmetric=False).csize
+            best = min(timings, key=timings.get)
+            regret = timings[auto] / timings[best]
+            emit(f"engine/{fname}/n{n}/auto_csize", auto,
+                 f"measured best={best}, regret={regret:.2f}x")
+            records.append({
+                "function": fname, "n": n, "m": m,
+                "auto_csize": int(auto), "best_csize": int(best),
+                "regret": round(float(regret), 4),
+                "us_per_point": {str(c): round(t / m * 1e6, 4)
+                                 for c, t in timings.items()},
+            })
+
+    # plan/cache overhead: a warm re-plan must be dispatch-only
+    f = testfns.FUNCTIONS[funcs[0]](ns[0])
+    A = jnp.asarray(rng.uniform(-2, 2, (m, ns[0])), jnp.float32)
+    V = jnp.asarray(rng.randn(m, ns[0]), jnp.float32)
+    p = engine.plan(f, ns[0], m=m, csize="auto", symmetric=False)
+    jax.block_until_ready(p.batched_hvp(A, V))
+    t0 = time.perf_counter()
+    reps = 20
+    for _ in range(reps):
+        p2 = engine.plan(f, ns[0], m=m, csize="auto", symmetric=False)
+        jax.block_until_ready(p2.batched_hvp(A, V))
+    replan_us = (time.perf_counter() - t0) / reps * 1e6
+    emit("engine/replan_execute_us", f"{replan_us:.1f}",
+         f"warm cache; total traces={engine.trace_count()}")
+
+    out = {
+        "bench": "engine_csize_selection",
+        "backend_default": engine.plan(
+            f, ns[0], m=m, symmetric=False).backend_for("batched_hvp"),
+        "replan_execute_us": round(replan_us, 2),
+        "records": records,
+    }
+    path = out_path or os.environ.get("BENCH_OUT", "BENCH_pr1.json")
+    with open(path, "w") as fh:
+        json.dump(out, fh, indent=2)
+        fh.write("\n")
+    emit("engine/bench_json", path, f"{len(records)} records")
+
+
+def main(quick: bool = False):
+    run(ns=(8, 16) if quick else NS, m=64 if quick else M)
+
+
+if __name__ == "__main__":
+    main()

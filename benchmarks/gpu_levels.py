@@ -11,13 +11,13 @@ the reproduced claim, and Tables 1-3's structure is emitted verbatim.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro import engine
 from repro.core import testfns
-from repro.core.api import batched_hvp, hvp, optimal_csize
+from repro.core.api import optimal_csize
 
 NS = (2, 4, 8, 16, 32, 64)
 FUNCS = ("rosenbrock", "ackley", "fletcher_powell")
@@ -41,16 +41,18 @@ def run(ns=NS, funcs=FUNCS, m=M_BATCH):
 
             per_point = {}
             for level in ("L0", "L1", "L2"):
-                fn = jax.jit(lambda A, V, level=level: batched_hvp(
-                    f, A, V, csize=cs, level=level))
-                t = time_fn(fn, A, V)
+                # one engine plan per schedule: the cached executable is
+                # what a serving deployment would hit
+                p = engine.plan(f, n, m=m_n, csize=cs, level=level,
+                                symmetric=False)
+                t = time_fn(p.batched_hvp, A, V)
                 per_point[level] = t / m_n
                 emit(f"levels/{fname}/n{n}/{level}_us_per_point",
                      f"{t / m_n * 1e6:.4f}", f"m={m_n},csize={cs}")
 
             # sequential reference: one instance at a time (python loop)
-            one = jax.jit(lambda a, v: hvp(f, a, v, csize=cs,
-                                           symmetric=True))
+            p_seq = engine.plan(f, n, csize=cs, symmetric=True)
+            one = p_seq.hvp
             t_seq = time_fn(
                 lambda: [one(A[i], V[i]) for i in range(M_SEQ)]) / M_SEQ
             emit(f"levels/{fname}/n{n}/seq_us_per_point",

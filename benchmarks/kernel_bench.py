@@ -5,14 +5,13 @@ model (bytes moved per FLOP with and without W-tile sharing)."""
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro import engine
 from repro.core import testfns
-from repro.core.api import batched_hvp
-from repro.kernels.ops import chess_hvp, hdual_linear
+from repro.kernels.ops import hdual_linear
 
 
 def run(quick=False):
@@ -22,12 +21,14 @@ def run(quick=False):
     V = jnp.asarray(rng.randn(m, n), jnp.float32)
 
     f = testfns.rosenbrock
-    t_xla = time_fn(jax.jit(lambda A, V: batched_hvp(f, A, V, csize=csize,
-                                                     level="L2")), A, V)
+    p_xla = engine.plan(f, n, m=m, csize=csize, backend="vmap_l2",
+                        symmetric=False)
+    t_xla = time_fn(p_xla.batched_hvp, A, V)
     emit("kernel/chess_hvp/xla_L2_us_per_point", f"{t_xla / m * 1e6:.2f}",
          f"m={m},n={n}")
-    t_pl = time_fn(lambda: chess_hvp(A, V, function="rosenbrock",
-                                     csize=csize, blk_m=8))
+    p_pl = engine.plan(f, n, m=m, csize=csize, backend="pallas",
+                       symmetric=False, blk_m=8)
+    t_pl = time_fn(p_pl.batched_hvp, A, V)
     emit("kernel/chess_hvp/pallas_interpret_us_per_point",
          f"{t_pl / m * 1e6:.2f}", "interpret=True (CPU correctness path)")
 

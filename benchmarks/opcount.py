@@ -1,5 +1,9 @@
 """Paper §5: scalar-operation-count model, validated two ways.
 
+The model itself now lives in ``repro.engine.opmodel`` (it is the engine's
+csize selector); this suite keeps the paper-claim assertions and the
+empirical jaxpr validation, and re-exports the formulas for back-compat.
+
 1. ANALYTIC: the paper's formulas --
      hDual<c> multiply = 6c+3 scalar mults + 4c adds; add = 2c+2 adds.
      CHUNK-HESS  : (6 + 3/c) n^2 M mults
@@ -14,47 +18,17 @@ from __future__ import annotations
 
 import math
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from benchmarks.common import emit
-from repro.core.api import eval_chunk, num_chunk_evals
+from repro.core.api import num_chunk_evals
+from repro.engine.opmodel import (count_jaxpr_ops, model_csize,
+                                  mults_chunk_hess, mults_schunk_hess)
 
 __all__ = ["mults_chunk_hess", "mults_schunk_hess", "count_jaxpr_ops"]
 
 
-def mults_chunk_hess(n, c, M):
-    return (6 + 3 / c) * n * n * M
-
-
-def mults_schunk_hess(n, c, M):
-    return 1.5 * n * (2 * n + 2 * c + n / c + 1) * M
-
-
-def count_jaxpr_ops(n, csize, n_mults):
-    """Trace f(x)=x0*x1*...*x_{k} on hDuals; count mul/add primitives."""
-    def f(y):
-        out = y[0]
-        for i in range(1, n_mults + 1):
-            out = out * y[i % n]
-        return out
-
-    a = jnp.arange(1, n + 1, dtype=jnp.float32)
-    jaxpr = jax.make_jaxpr(
-        lambda a: eval_chunk(f, a, 0, 0, csize).dij)(a)
-    counts = {"mul": 0, "add": 0}
-    for eqn in jaxpr.jaxpr.eqns:
-        if eqn.primitive.name in counts:
-            # vector ops over the chunk axis count csize scalar ops
-            size = max(int(np.prod(v.aval.shape)) if v.aval.shape else 1
-                       for v in eqn.outvars)
-            counts[eqn.primitive.name] += size
-    return counts
-
-
 def run():
-    # analytic: c* = sqrt(n/2) minimizes SCHUNK mults (paper claim)
+    # analytic: c* = sqrt(n/2) minimizes SCHUNK mults (paper claim), and the
+    # engine's model_csize returns exactly that argmin
     for n in (8, 32, 128, 512):
         cs = [c for c in (1, 2, 4, 8, 16, 32) if c <= n and n % c == 0]
         mults = {c: mults_schunk_hess(n, c, 1) for c in cs}
@@ -63,6 +37,8 @@ def run():
              f"analytic argmin; sqrt(n/2)={math.sqrt(n / 2):.2f}")
         assert abs(best - math.sqrt(n / 2)) <= max(1, best / 2 + 1), (
             n, best)
+        assert mults_schunk_hess(n, model_csize(n, True), 1) <= mults[best], (
+            n, model_csize(n, True))
     # chunk-eval counts match the formulas' structure
     for n in (8, 16):
         for c in (1, 2, 4, 8):

@@ -20,6 +20,7 @@ SUITES = {
     "csize": "benchmarks.csize_sweep",      # §3.2 dial
     "kernel": "benchmarks.kernel_bench",    # Pallas layer
     "optimizer": "benchmarks.optimizer_compare",  # SophiaH/CHESSFAD vs AdamW
+    "engine": "benchmarks.engine_bench",    # plan/execute csize selection
 }
 
 

@@ -1,10 +1,18 @@
 """The paper's headline workload as a service: a large batch of independent
-Hessian-vector products on standard test functions, scheduled L0/L1/L2 and
-(optionally) sharded over a device mesh -- the CPU-scaled stand-in for the
-paper's 0.5M-instance A100 run (§7).
+Hessian-vector products on standard test functions, planned and executed by
+the unified CurvatureEngine -- the CPU-scaled stand-in for the paper's
+0.5M-instance A100 run (§7).
+
+The engine owns every scheduling decision the old flags hard-coded: csize
+("auto" = §5 op model, "autotune" = one-shot microbenchmark), backend
+("auto", or any of reference / vmap_l0 / vmap_l1 / vmap_l2 / pallas /
+sharded), and the executable cache (repeat requests with the same signature
+never retrace -- the serving property).
 
     PYTHONPATH=src python examples/hvp_service.py --n 16 --instances 4096 \
-        --function ackley --level L2 --csize auto
+        --function ackley --backend auto --csize auto
+    PYTHONPATH=src python examples/hvp_service.py --backend pallas
+    PYTHONPATH=src python examples/hvp_service.py --mesh   # shard over devices
 """
 
 import argparse
@@ -14,10 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine
 from repro.core import testfns
-from repro.core.api import batched_hvp, optimal_csize
-from repro.core.distributed import distributed_batched_hvp
-from repro.kernels.ops import chess_hvp
 
 
 def main():
@@ -26,41 +32,51 @@ def main():
                     choices=list(testfns.FUNCTIONS))
     ap.add_argument("--n", type=int, default=16)
     ap.add_argument("--instances", type=int, default=4096)
-    ap.add_argument("--csize", default="auto")
-    ap.add_argument("--level", default="L2", choices=["L0", "L1", "L2"])
+    ap.add_argument("--csize", default="auto",
+                    help="int, 'auto' (§5 model) or 'autotune' (measured)")
+    ap.add_argument("--backend", default="auto",
+                    help=f"one of: auto, {', '.join(sorted(engine.list_backends()))}")
+    ap.add_argument("--level", default=None, choices=["L0", "L1", "L2"],
+                    help="legacy schedule alias (maps to vmap_l* backends)")
     ap.add_argument("--kernel", action="store_true",
-                    help="run the Pallas chess_hvp kernel path")
+                    help="legacy alias for --backend pallas")
     ap.add_argument("--mesh", action="store_true",
                     help="shard instances over a device mesh (L0)")
     args = ap.parse_args()
 
     n, m = args.n, args.instances
-    csize = optimal_csize(n) if args.csize == "auto" else int(args.csize)
+    csize = args.csize if args.csize in ("auto", "autotune") \
+        else int(args.csize)
+    # precedence matches the pre-engine service: --mesh wins over --kernel
+    backend = "pallas" if args.kernel and not args.mesh else args.backend
+    from repro.compat import make_mesh
+    mesh = make_mesh((len(jax.devices()),), ("data",)) if args.mesh \
+        else None
     f = testfns.FUNCTIONS[args.function](n)
     rng = np.random.RandomState(0)
     A = jnp.asarray(rng.uniform(-2, 2, (m, n)), jnp.float32)
     V = jnp.asarray(rng.randn(m, n), jnp.float32)
 
-    if args.mesh:
-        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
-        run = lambda: distributed_batched_hvp(mesh, f, A, V, csize=csize,
-                                              level=args.level)
-    elif args.kernel:
-        run = lambda: chess_hvp(A, V, function=args.function, csize=csize,
-                                blk_m=8)
-    else:
-        run = jax.jit(lambda: batched_hvp(f, A, V, csize=csize,
-                                          level=args.level))
+    plan = engine.plan(f, n, m=m, csize=csize, backend=backend, mesh=mesh,
+                       level=args.level, symmetric=False)
+    resolved = plan.backend_for("batched_hvp")
 
-    out = jax.block_until_ready(run())          # compile + warmup
+    out = jax.block_until_ready(plan.batched_hvp(A, V))  # compile + warmup
     t0 = time.perf_counter()
-    out = jax.block_until_ready(run())
+    out = jax.block_until_ready(plan.batched_hvp(A, V))
     dt = time.perf_counter() - t0
-    print(f"{args.function} n={n} m={m} csize={csize} level={args.level}"
-          f"{' kernel' if args.kernel else ''}"
-          f"{' mesh' if args.mesh else ''}")
+    print(f"{args.function} n={n} m={m} csize={plan.csize} "
+          f"backend={resolved}{' mesh' if args.mesh else ''}")
     print(f"  {dt * 1e3:.1f} ms total, {dt / m * 1e6:.2f} us/point, "
           f"finite={bool(jnp.isfinite(out).all())}")
+    # serving property: an identical re-plan is a pure cache hit
+    t0 = time.perf_counter()
+    plan2 = engine.plan(f, n, m=m, csize=plan.csize, backend=backend,
+                        mesh=mesh, level=args.level, symmetric=False)
+    jax.block_until_ready(plan2.batched_hvp(A, V))
+    dt2 = time.perf_counter() - t0
+    print(f"  re-plan + execute (cache hit): {dt2 * 1e3:.1f} ms, "
+          f"total traces={engine.trace_count()}")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,11 @@
-"""CHESSFAD inside the LM: curvature diagnostics on a real (reduced) model.
+"""CHESSFAD inside the LM: curvature diagnostics on a real (reduced) model,
+driven by the unified CurvatureEngine's pytree backends.
 
 1. Chunked Hutchinson diagonal-Hessian estimate of the full training loss
-   (the SophiaH preconditioner, standalone).
-2. A DENSE block Hessian of the loss w.r.t. one small parameter block via
+   (the SophiaH preconditioner) via ``plan(f, None).diag(...)`` -- the
+   probe batch plays the chunk role and the executable is cached.
+2. One HVP through the same plan's cache (pytree_fwdrev backend).
+3. A DENSE block Hessian of the loss w.r.t. one small parameter block via
    the paper's chunked row algorithm -- eigenvalues tell you how stiff that
    block is.
 
@@ -15,8 +18,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine
 from repro.configs import get_config
-from repro.core.curvature import block_hessian, hutchinson_diag
+from repro.core.curvature import block_hessian, rademacher_like
 from repro.models.model import loss_fn, make_batch
 from repro.models.params import flatten, init_params
 
@@ -35,9 +39,12 @@ def main():
 
     print(f"loss at init: {float(f(params)):.4f}")
 
+    # ONE pytree plan: diag and hvp share the engine's executable cache
+    plan = engine.plan(f, None, csize=args.csize, backend="pytree_fwdrev",
+                       n_probes=args.probes)
+
     # --- chunked Hutchinson diag(H) over the whole parameter tree -------
-    diag = hutchinson_diag(f, params, jax.random.PRNGKey(1),
-                           n_probes=args.probes, csize=args.csize)
+    diag = plan.diag(params, jax.random.PRNGKey(1))
     flat = flatten(diag)
     by_mag = sorted(flat.items(),
                     key=lambda kv: -float(jnp.abs(kv[1]).mean()))
@@ -45,6 +52,14 @@ def main():
           f"{args.csize} through one linearization):")
     for k, v in by_mag[:5]:
         print(f"  {k:42s} mean|h| = {float(jnp.abs(v).mean()):.3e}")
+
+    # --- one HVP through the same plan (cached executable) ---------------
+    probe = rademacher_like(jax.random.PRNGKey(2), params)
+    hv = plan.hvp(params, probe)
+    hv_norm = jnp.sqrt(sum((l.astype(jnp.float32) ** 2).sum()
+                           for l in jax.tree.leaves(hv)))
+    print(f"\n|H v| for one Rademacher probe: {float(hv_norm):.3e} "
+          f"(backend={plan.backend_for('hvp')})")
 
     # --- dense block Hessian of the final norm scale ---------------------
     H = block_hessian(f, params, "final_norm", csize=args.csize)

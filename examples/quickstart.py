@@ -57,6 +57,14 @@ def main():
         print(f"  batched {level}: out {R.shape}, "
               f"finite={bool(jnp.isfinite(R).all())}")
 
+    # --- the engine underneath: plan once, execute cached ----------------
+    from repro import engine
+    plan = engine.plan(testfns.rosenbrock, n, m=m, csize="auto",
+                       backend="auto", symmetric=False)
+    R = plan.execute(A, V)              # shape-dispatched single entry point
+    print(f"  engine plan: csize={plan.csize}, "
+          f"backend={plan.backend_for('batched_hvp')}, out {R.shape}")
+
 
 if __name__ == "__main__":
     main()

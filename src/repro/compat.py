@@ -1,0 +1,68 @@
+"""JAX version-compatibility shims.
+
+The repo targets the modern API surface (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh`` with ``axis_types``); older 0.4.x
+installs expose ``jax.experimental.shard_map`` with ``check_rep`` and a
+``make_mesh`` without axis types.  The wrappers here accept the modern
+keyword set and translate to whatever the installed JAX understands, so
+every call site (distributed CHESSFAD, MoE, pipeline, train steps, tests)
+has ONE place that knows about the renames.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:
+    from jax import shard_map as _shard_map  # jax >= 0.8
+except ImportError:  # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = inspect.signature(_shard_map).parameters
+if "check_vma" in _PARAMS:
+    _REP_KW = "check_vma"
+elif "check_rep" in _PARAMS:
+    _REP_KW = "check_rep"
+else:  # pragma: no cover - keyword dropped entirely
+    _REP_KW = None
+
+__all__ = ["shard_map", "make_mesh", "auto_axis_types"]
+
+_MAKE_MESH_PARAMS = inspect.signature(jax.make_mesh).parameters
+
+
+def auto_axis_types(n_axes: int):
+    """(AxisType.Auto,) * n_axes on jax versions that have axis types,
+    None otherwise."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return None
+    return (axis_type.Auto,) * n_axes
+
+
+def make_mesh(axis_shapes, axis_names, **kw):
+    """jax.make_mesh accepting ``axis_types`` on every jax version (the
+    keyword is dropped where unsupported; Auto is the legacy behavior)."""
+    if "axis_types" in _MAKE_MESH_PARAMS:
+        if kw.get("axis_types") is None:
+            kw["axis_types"] = auto_axis_types(len(tuple(axis_names)))
+        if kw.get("axis_types") is None:  # AxisType absent: drop the kw
+            kw.pop("axis_types", None)
+    else:
+        kw.pop("axis_types", None)
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+    """Drop-in for jax's shard_map, tolerant of the check_vma/check_rep
+    rename (same default, True, as stock jax).  Usable directly or via
+    functools.partial as a decorator."""
+    if _REP_KW is not None and _REP_KW not in kw:
+        kw[_REP_KW] = check_vma
+    if f is None:
+        return lambda fn: _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                     out_specs=out_specs, **kw)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

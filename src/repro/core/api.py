@@ -21,11 +21,15 @@ vectorize the trailing chunk axis onto VPU lanes.
 All chunk enumerations are static (numpy at trace time), so jit caches one
 executable per (n, csize, symmetric) signature -- the analogue of the paper's
 per-csize template instantiation.
+
+The public functions here are thin facades over ``repro.engine``: the
+engine plans csize/backend, owns the process-wide executable cache, and
+dispatches to the raw schedules (`*_impl` below), which backends call
+directly.  The call signatures are unchanged from the pre-engine API.
 """
 
 from __future__ import annotations
 
-import math
 from functools import partial
 
 import jax
@@ -37,6 +41,7 @@ from .hdual import HDual, seed_point
 __all__ = [
     "eval_chunk", "hessian", "hvp", "gradient", "batched_hvp", "batched_hessian",
     "chunk_pairs", "num_chunk_evals", "optimal_csize",
+    "hessian_impl", "hvp_impl", "batched_hvp_impl",
 ]
 
 
@@ -69,15 +74,10 @@ def num_chunk_evals(n: int, csize: int, symmetric: bool) -> int:
 
 def optimal_csize(n: int) -> int:
     """Paper §5: scalar multiplications of SCHUNK-HESS are minimized at
-    csize = sqrt(n/2); return the nearest power of two that divides n."""
-    target = math.sqrt(n / 2.0)
-    best, bestd = 1, abs(1 - target)
-    c = 1
-    while c <= n:
-        if n % c == 0 and abs(c - target) < bestd:
-            best, bestd = c, abs(c - target)
-        c *= 2
-    return best
+    csize = sqrt(n/2); returns the §5 model argmin over power-of-two
+    divisors of n (delegates to the engine's op model)."""
+    from repro.engine.opmodel import model_csize
+    return model_csize(n, symmetric=True)
 
 
 # ---------------------------------------------------------------------------
@@ -99,10 +99,8 @@ def eval_chunk(f, a, i, cstart, csize: int):
 # full Hessian (Alg. 5 / Alg. 6)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnums=(0, 2, 3))
-def hessian(f, a, csize: int = 1, symmetric: bool = True):
-    """Dense Hessian of scalar ``f`` at ``a`` (shape (n,)) via chunked
-    forward-mode hDual evaluation.
+def hessian_impl(f, a, csize: int = 1, symmetric: bool = True):
+    """Raw dense-Hessian schedule (no jit -- the engine compiles/caches).
 
     L1 x L2 parallelism: a single vmap over the flat (row, chunk) pair list --
     every Hessian chunk is an independent program instance, exactly the
@@ -152,9 +150,8 @@ def gradient(f, a, csize: int = 8):
 # Hessian-vector product (Alg. 7 / Alg. 8)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnums=(0, 3, 4))
-def hvp(f, a, v, csize: int = 1, symmetric: bool = True):
-    """r = H(a) @ v without materializing H.
+def hvp_impl(f, a, v, csize: int = 1, symmetric: bool = True):
+    """Raw HVP schedule: r = H(a) @ v without materializing H.
 
     Chunks are computed, dotted against v, and discarded (paper §3.3). With
     symmetric=True the below-diagonal chunks are never evaluated; each
@@ -189,9 +186,9 @@ def hvp(f, a, v, csize: int = 1, symmetric: bool = True):
 # batched instances: the paper's L0 / L1 / L2 GPU schedules (Alg. 9/10, Fig 2)
 # ---------------------------------------------------------------------------
 
-def batched_hvp(f, A, V, csize: int = 1, level: str = "L2",
-                symmetric: bool = False):
-    """Hessian-vector products for m instances: A, V are (m, n).
+def batched_hvp_impl(f, A, V, csize: int = 1, level: str = "L2",
+                     symmetric: bool = False):
+    """Raw batched-HVP schedules for m instances: A, V are (m, n).
 
     level="L0": one program per instance; rows+chunks sequential (lax.scan)
                 inside -- mirrors Alg. 9's thread-per-instance.
@@ -211,7 +208,7 @@ def batched_hvp(f, A, V, csize: int = 1, level: str = "L2",
     starts_np = np.arange(nc, dtype=np.int32) * csize
 
     if level == "L2":
-        fn = partial(hvp, f, csize=csize, symmetric=symmetric)
+        fn = partial(hvp_impl, f, csize=csize, symmetric=symmetric)
         return jax.vmap(lambda a, v: fn(a, v))(A, V)
 
     def row_hvp(a, v, i):
@@ -242,6 +239,44 @@ def batched_hvp(f, A, V, csize: int = 1, level: str = "L2",
     return jax.vmap(inst)(A, V)
 
 
-def batched_hessian(f, A, csize: int = 1, symmetric: bool = True):
+# ---------------------------------------------------------------------------
+# public facades: plan/execute through the unified CurvatureEngine
+# ---------------------------------------------------------------------------
+
+def _plan(f, n, csize, symmetric, backend="auto", m=None):
+    from repro.engine import plan as engine_plan
+    return engine_plan(f, n, m=m, csize=csize, symmetric=symmetric,
+                       backend=backend)
+
+
+def hessian(f, a, csize=1, symmetric: bool = True):
+    """Dense Hessian of scalar ``f`` at ``a`` (shape (n,)) via the engine's
+    chunked forward-mode schedule.  csize may be an int, "auto" (§5 model)
+    or "autotune" (one-shot microbenchmark)."""
+    a = jnp.asarray(a)
+    return _plan(f, a.shape[-1], csize, symmetric).hessian(a)
+
+
+def hvp(f, a, v, csize=1, symmetric: bool = True):
+    """r = H(a) @ v without materializing H (engine-planned and cached)."""
+    a = jnp.asarray(a)
+    return _plan(f, a.shape[-1], csize, symmetric).hvp(a, jnp.asarray(v))
+
+
+def batched_hvp(f, A, V, csize=1, level: str = "L2",
+                symmetric: bool = False):
+    """HVPs for m instances under the paper's L0/L1/L2 schedule; the level
+    maps onto the matching engine backend (vmap_l0/l1/l2)."""
+    if level not in ("L0", "L1", "L2"):
+        raise ValueError(f"unknown level {level!r}")
+    A = jnp.asarray(A)
+    p = _plan(f, A.shape[-1], csize, symmetric,
+              backend=f"vmap_{level.lower()}", m=A.shape[0])
+    return p.batched_hvp(A, jnp.asarray(V))
+
+
+def batched_hessian(f, A, csize=1, symmetric: bool = True):
     """Dense Hessians for m instances (m, n) -> (m, n, n)."""
-    return jax.vmap(lambda a: hessian(f, a, csize, symmetric))(jnp.asarray(A))
+    A = jnp.asarray(A)
+    return _plan(f, A.shape[-1], csize, symmetric,
+                 m=A.shape[0]).batched_hessian(A)

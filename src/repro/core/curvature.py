@@ -27,6 +27,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.engine.registry import BackendSpec, register_backend
+
 __all__ = ["pytree_hvp", "pytree_hvp_fwd", "hutchinson_diag",
            "rademacher_like", "block_hessian"]
 
@@ -143,3 +145,41 @@ def block_hessian(f, params, block_path: str, csize: int = 8,
             upper = (jnp.asarray(cols) // csize > block_i) & valid
             H = H.at[cols, rr].add(jnp.where(upper, chunks, 0.0))
         return H
+
+
+# ---------------------------------------------------------------------------
+# engine backends: the LM-scale pytree paths, behind the same registry and
+# executable cache as the flat-vector schedules (newton_cg / lm_curvature
+# share compiled HVPs across calls instead of re-jitting per point)
+# ---------------------------------------------------------------------------
+
+def _pytree_fwdrev_make(plan, workload):
+    f = plan.f
+    if workload == "hvp":
+        return lambda params, v: pytree_hvp(f, params, v)
+    if workload == "diag":
+        n_probes = int(plan.opt("n_probes", 4))
+        if n_probes % max(plan.csize, 1) != 0:
+            raise ValueError(
+                f"diag workload needs csize | n_probes; got csize="
+                f"{plan.csize}, n_probes={n_probes}")
+        return lambda params, key: hutchinson_diag(
+            f, params, key, n_probes=n_probes, csize=plan.csize)
+    raise KeyError(workload)
+
+
+register_backend(BackendSpec(
+    name="pytree_fwdrev", make=_pytree_fwdrev_make,
+    workloads=frozenset({"hvp", "diag"}), priority=-10, flat_only=False,
+    doc="jvp-of-grad on parameter pytrees; diag = chunked Hutchinson"))
+
+
+def _pytree_fwd_make(plan, workload):
+    f = plan.f
+    return lambda params, v, w: pytree_hvp_fwd(f, params, v, w)
+
+
+register_backend(BackendSpec(
+    name="pytree_fwd", make=_pytree_fwd_make,
+    workloads=frozenset({"quadform"}), priority=-20, flat_only=False,
+    doc="pure-forward w^T H v (no reverse sweep, no activation storage)"))

@@ -20,12 +20,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-try:
-    from jax import shard_map  # jax >= 0.8
-except ImportError:  # pragma: no cover - older jax
-    from jax.experimental.shard_map import shard_map
+from repro.compat import shard_map
 
-from .api import batched_hvp, hvp
+from .api import batched_hvp_impl
 
 __all__ = ["distributed_batched_hvp", "distributed_hvp_rows"]
 
@@ -43,8 +40,11 @@ def distributed_batched_hvp(mesh: Mesh, f, A, V, csize: int = 8,
     @partial(shard_map, mesh=mesh, in_specs=(spec, spec), out_specs=spec,
              check_vma=False)
     def run(a_blk, v_blk):
-        return batched_hvp(f, a_blk, v_blk, csize=csize, level=level,
-                           symmetric=symmetric)
+        # raw schedule, not the engine facade: shard_map bodies stay
+        # engine-free (the engine wraps THIS function via its sharded
+        # backend and owns the jit cache one level up)
+        return batched_hvp_impl(f, a_blk, v_blk, csize=csize, level=level,
+                                symmetric=symmetric)
 
     return run(A, V)
 

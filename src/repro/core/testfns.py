@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import hmath as hm
-from .hdual import HDual
+from .hdual import HDual, _val
 
 __all__ = ["rosenbrock", "ackley", "fletcher_powell", "make_fletcher_powell",
            "FUNCTIONS", "sample_point"]
@@ -55,15 +55,35 @@ def _fp_coeffs(n: int, seed: int = 1963):
     return _FP_CACHE[key]
 
 
+_FP_FN_CACHE: dict = {}
+
+
 def make_fletcher_powell(n: int, seed: int = 1963):
+    # cache the closure: stable function identity keeps the engine's
+    # executable cache hot across repeated make_fletcher_powell(n) calls
+    key = (n, seed)
+    if key in _FP_FN_CACHE:
+        return _FP_FN_CACHE[key]
     A, B, E = _fp_coeffs(n, seed)
 
-    def fletcher_powell(x):
-        s = hm.matvec_const(A, hm.sin(x))
-        c = hm.matvec_const(B, hm.cos(x))
-        r = (s + c) - E
+    def _fp_kernel(y, A, B, E):
+        s = hm.matvec_const(A, hm.sin(y))
+        c = hm.matvec_const(B, hm.cos(y))
+        # E broadcasts over any trailing instance axes of the value shape
+        # ((n,) on the CPU path -- identity reshape -- and (n, blk_m)
+        # inside the Pallas kernel)
+        Eb = E.reshape(E.shape + (1,) * (jnp.ndim(_val(s)) - 1))
+        r = (s + c) - Eb
         return (r * r).sum(0)
 
+    def fletcher_powell(x):
+        return _fp_kernel(x, A, B, E)
+
+    # kernel adapter consumed by the engine's pallas backend: constant
+    # coefficient arrays enter the kernel as broadcast refs, not closures
+    fletcher_powell.pallas_fn = _fp_kernel
+    fletcher_powell.pallas_consts = (A, B, E)
+    _FP_FN_CACHE[key] = fletcher_powell
     return fletcher_powell
 
 

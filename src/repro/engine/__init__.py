@@ -1,0 +1,44 @@
+"""repro.engine -- the unified CurvatureEngine (plan/execute architecture).
+
+One chunked-forward-mode algorithm serves every curvature workload; the
+engine makes the scheduling decision explicit, cached, and tunable:
+
+    from repro import engine
+
+    p = engine.plan(f, n, csize="auto", backend="auto", symmetric=True)
+    r  = p.hvp(a, v)              # single HVP
+    H  = p.hessian(a)             # dense Hessian
+    R  = p.batched_hvp(A, V)      # m instances
+    r2 = p.execute(a, v)          # shape-dispatched single entry point
+
+Planning decisions:
+  csize   : "auto" -> paper §5 scalar-op model argmin;
+            "autotune" -> one-shot microbenchmark; or an explicit int.
+  backend : "auto" -> registry pick (mesh => sharded, else the L2 vmap
+            schedule; Pallas auto-wins on TPU); or any registered name --
+            reference | vmap_l0 | vmap_l1 | vmap_l2 | pallas | sharded |
+            pytree_fwdrev (also serves the Hutchinson "diag" workload) |
+            pytree_fwd ("quadform").
+
+Executables are cached process-wide on (f, n, csize, symmetric, backend,
+mesh, workload, options): repeated plans with the same static signature
+never retrace.  ``register_backend`` makes "add a backend" a one-file
+change; ``list_backends()`` shows what is live.
+"""
+
+from .plan import (CurvaturePlan, plan, clear_cache, trace_count,
+                   cache_size)
+from .registry import (BackendSpec, register_backend, get_backend,
+                       list_backends, resolve_backend, WORKLOADS)
+from .opmodel import (model_csize, csize_candidates, mults_chunk_hess,
+                      mults_schunk_hess, count_jaxpr_ops, LANE_WIDTH)
+from .autotune import autotune_csize, clear_autotune_cache
+
+__all__ = [
+    "CurvaturePlan", "plan", "clear_cache", "trace_count", "cache_size",
+    "BackendSpec", "register_backend", "get_backend", "list_backends",
+    "resolve_backend", "WORKLOADS",
+    "model_csize", "csize_candidates", "mults_chunk_hess",
+    "mults_schunk_hess", "count_jaxpr_ops", "LANE_WIDTH",
+    "autotune_csize", "clear_autotune_cache",
+]

@@ -1,0 +1,105 @@
+"""One-shot microbenchmark csize autotuner.
+
+The §5 op model predicts the scalar-work argmin, but on real hardware the
+best csize also depends on lane occupancy and memory traffic.  ``csize=
+"autotune"`` runs each candidate once on a small synthetic probe batch,
+wall-clocks the cached executable, and memoizes the winner per
+``(f, n, symmetric, backend, mesh)`` -- so the tune is paid once per
+process, and every later plan with that signature reuses the answer.
+"""
+
+from __future__ import annotations
+
+import collections
+import time
+
+import jax
+import numpy as np
+
+from . import opmodel
+
+__all__ = ["autotune_csize", "clear_autotune_cache"]
+
+# LRU-bounded for the same reason as the plan executable cache: keys
+# strong-reference f, and per-request closures must not pin forever
+AUTOTUNE_CACHE_MAXSIZE = 64
+_AUTOTUNE_CACHE: collections.OrderedDict = collections.OrderedDict()
+
+
+def clear_autotune_cache() -> None:
+    _AUTOTUNE_CACHE.clear()
+
+
+def _time_once(fn, reps: int = 3) -> float:
+    jax.block_until_ready(fn())          # compile + warmup
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def autotune_csize(f, n: int, m=None, symmetric: bool = False,
+                   backend: str = "auto", mesh=None, options=(),
+                   workload: str = "batched_hvp", probe_m: int = 32,
+                   reps: int = 3, seed: int = 0) -> int:
+    """Measured argmin csize for ``workload`` ("batched_hvp", "hvp" or
+    "hessian") of ``f`` at dimension n.
+
+    Returns the fastest candidate (power-of-two divisors of n, lane-capped).
+    Individually infeasible candidates (e.g. pallas divisibility) are
+    skipped; if EVERY candidate fails the configuration is broken and a
+    RuntimeError chains the root cause.
+    Memoized on (f, n, workload, probe batch size, symmetric, backend,
+    mesh, options) -- the probe shapes the measurement, so callers with
+    different m hints or workloads tune separately.  ``plan(csize=
+    "autotune")`` tunes batched_hvp when an m hint is given, else hvp."""
+    from .plan import plan as make_plan
+
+    if workload not in ("batched_hvp", "hvp", "hessian"):
+        raise ValueError(f"cannot autotune workload {workload!r}")
+    if backend != "auto":
+        from .registry import get_backend
+        get_backend(backend)            # fail fast on typos
+    mm = int(m) if m else probe_m
+    mm = max(8, min(mm, probe_m * 4))
+    key = (f, n, workload, mm, bool(symmetric), backend, mesh,
+           tuple(options))
+    hit = _AUTOTUNE_CACHE.get(key)
+    if hit is not None:
+        _AUTOTUNE_CACHE.move_to_end(key)
+        return hit
+    rng = np.random.RandomState(seed)
+    A = np.asarray(rng.uniform(-2, 2, (mm, n)), np.float32)
+    V = np.asarray(rng.randn(mm, n), np.float32)
+
+    best_c, best_t = None, float("inf")
+    last_err = None
+    for c in opmodel.csize_candidates(n):
+        try:
+            p = make_plan(f, n, m=mm, csize=c, backend=backend,
+                          symmetric=symmetric, mesh=mesh,
+                          options=dict(options))
+            if workload == "batched_hvp":
+                run = lambda: p.batched_hvp(A, V)
+            elif workload == "hvp":
+                run = lambda: p.hvp(A[0], V[0])
+            else:
+                run = lambda: p.hessian(A[0])
+            t = _time_once(run, reps=reps)
+        except Exception as e:   # a single infeasible candidate is fine
+            last_err = e
+            continue
+        if t < best_t:
+            best_c, best_t = c, t
+    if best_c is None:
+        # EVERY candidate failed: f/backend/mesh is broken, not untuned
+        raise RuntimeError(
+            f"autotune: no csize candidate ran for n={n}, "
+            f"backend={backend!r}") from last_err
+    _AUTOTUNE_CACHE[key] = best_c
+    while len(_AUTOTUNE_CACHE) > AUTOTUNE_CACHE_MAXSIZE:
+        _AUTOTUNE_CACHE.popitem(last=False)
+    return best_c

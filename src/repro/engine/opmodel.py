@@ -1,0 +1,109 @@
+"""Paper §5 scalar-operation-count model -- the engine's csize selector.
+
+The cost model (moved here from benchmarks/opcount.py so planning code and
+benchmarks share one source of truth):
+
+  hDual<c> multiply = 6c+3 scalar mults + 4c adds; add = 2c+2 adds.
+  CHUNK-HESS  : (6 + 3/c) n^2 M mults          (monotone decreasing in c)
+  SCHUNK-HESS : (3/2) n (2n + 2c + n/c + 1) M  (convex, minimized at
+                c* = sqrt(n/2))
+
+``model_csize`` evaluates the relevant formula over the feasible candidate
+set (divisors of n, power-of-two biased, capped at the VPU lane width) and
+returns the argmin -- a pure static decision, no tracing or timing.
+``count_jaxpr_ops`` stays as the empirical validator used by the opcount
+benchmark suite.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "mults_chunk_hess", "mults_schunk_hess", "csize_candidates",
+    "model_csize", "count_jaxpr_ops", "LANE_WIDTH",
+]
+
+# TPU VPU lane width: the chunk axis vectorizes onto lanes, so csize beyond
+# 128 buys no additional parallelism while growing the hDual state.
+LANE_WIDTH = 128
+
+
+def mults_chunk_hess(n, c, M):
+    """Scalar multiplies of CHUNK-HESS (paper §5, non-symmetric)."""
+    return (6 + 3 / c) * n * n * M
+
+
+def mults_schunk_hess(n, c, M):
+    """Scalar multiplies of SCHUNK-HESS (paper §5, symmetric)."""
+    return 1.5 * n * (2 * n + 2 * c + n / c + 1) * M
+
+
+def csize_candidates(n: int) -> list[int]:
+    """Feasible csizes: power-of-two divisors of n (the paper's template
+    instantiations), capped at the lane width; always includes 1."""
+    cands = []
+    c = 1
+    while c <= min(n, LANE_WIDTH):
+        if n % c == 0:
+            cands.append(c)
+        c *= 2
+    return cands or [1]
+
+
+def model_csize(n: int, symmetric: bool = True) -> int:
+    """§5 scalar-multiply model argmin over the candidate set.
+
+    symmetric=True  -> SCHUNK-HESS model, sharply convex and minimized
+                       near sqrt(n/2): exact argmin.
+    symmetric=False -> CHUNK-HESS model, (6 + 3/c) n^2: monotone but
+                       nearly flat past small c, while the hDual state
+                       (2c+2 floats per value -- the paper's csize <->
+                       fast-memory dial) keeps growing.  Return the
+                       SMALLEST candidate within 10% of the model minimum
+                       rather than the degenerate largest chunk.
+    """
+    cands = csize_candidates(n)
+    cost = (mults_schunk_hess if symmetric else mults_chunk_hess)
+    best = min(cost(n, c, 1) for c in cands)
+    if symmetric:
+        return min(cands, key=lambda c: (cost(n, c, 1), c))
+    return min(c for c in cands if cost(n, c, 1) <= 1.10 * best)
+
+
+def count_jaxpr_ops(n, csize, n_mults):
+    """Trace f(x)=x0*x1*...*x_{k} on hDuals; count mul/add primitives.
+
+    Empirical check that one hDual multiply costs ~6c+3 scalar mults."""
+    from repro.core.api import eval_chunk
+
+    def f(y):
+        out = y[0]
+        for i in range(1, n_mults + 1):
+            out = out * y[i % n]
+        return out
+
+    a = jnp.arange(1, n + 1, dtype=jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda a: eval_chunk(f, a, 0, 0, csize).dij)(a)
+    counts = {"mul": 0, "add": 0}
+    for eqn in jaxpr.jaxpr.eqns:
+        if eqn.primitive.name in counts:
+            # vector ops over the chunk axis count csize scalar ops
+            size = max(int(np.prod(v.aval.shape)) if v.aval.shape else 1
+                       for v in eqn.outvars)
+            counts[eqn.primitive.name] += size
+    return counts
+
+
+def _sanity():  # pragma: no cover - developer aid
+    for n in (8, 32, 128, 512):
+        print(n, model_csize(n), math.sqrt(n / 2))
+
+
+if __name__ == "__main__":  # pragma: no cover
+    _sanity()

@@ -1,0 +1,236 @@
+"""CurvaturePlan: the plan/execute heart of the unified CurvatureEngine.
+
+``plan(f, n, ...)`` makes every decision the paper leaves to the caller --
+chunk size (§5 op model or a one-shot microbenchmark), backend (registry
+lookup honoring mesh / platform / divisibility constraints) -- and returns a
+frozen ``CurvaturePlan``.  Executing a plan hits a process-wide executable
+cache keyed on the static signature ``(f, n, csize, symmetric, backend,
+mesh, workload, options)``, so two plans with the same signature share ONE
+jitted program and repeated calls never retrace (the analogue of the
+paper's per-csize template instantiation, now engine-managed).
+
+Every executable is wrapped with a trace counter; tests assert zero
+retraces on cache hits via ``trace_count``.
+"""
+
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+
+from . import opmodel
+from .registry import resolve_backend
+
+__all__ = ["CurvaturePlan", "plan", "clear_cache", "trace_count",
+           "cache_size", "CACHE_MAXSIZE"]
+
+# LRU-bounded: cache keys strong-reference f, so per-call closures (e.g.
+# block_hessian's f_of_block) would otherwise pin one jitted executable
+# per call forever in a long-running process.
+CACHE_MAXSIZE = 512
+_EXECUTABLES: collections.OrderedDict = collections.OrderedDict()
+_TRACE_COUNTS: collections.Counter = collections.Counter()
+_TOTAL_TRACES: int = 0           # monotonic; survives LRU eviction
+
+
+def clear_cache() -> None:
+    """Drop every cached executable and trace count (tests / memory)."""
+    global _TOTAL_TRACES
+    _EXECUTABLES.clear()
+    _TRACE_COUNTS.clear()
+    _TOTAL_TRACES = 0
+
+
+def cache_size() -> int:
+    return len(_EXECUTABLES)
+
+
+def trace_count(key=None) -> int:
+    """Total number of traces performed (or for one cache key).
+
+    The total is monotonic even when LRU eviction drops per-key counts."""
+    if key is None:
+        return _TOTAL_TRACES
+    return _TRACE_COUNTS[key]
+
+
+@dataclass(frozen=True)
+class CurvaturePlan:
+    """An executable decision: what to compute and how.
+
+    f         : scalar objective (hmath-written for hDual backends, any
+                jax-traceable callable for reference / pytree backends)
+    n         : flat problem dimension, or None for pytree workloads
+    m         : batch-size hint (backend selection / autotune only; NOT
+                part of the executable cache key -- jit re-specializes on
+                shapes as usual)
+    csize     : resolved chunk size (int; "auto"/"autotune" are resolved
+                by ``plan()`` before construction)
+    symmetric : exploit Hessian symmetry (paper Alg. 6/8 schedules)
+    backend   : registry name or "auto" (resolved per workload)
+    mesh      : optional jax.sharding.Mesh for the sharded backend
+    options   : hashable (key, value) pairs of backend tunables
+                (blk_m, interpret, level, data_axes, n_probes, ...)
+    """
+
+    f: Callable
+    n: Optional[int]
+    m: Optional[int] = None
+    csize: int = 1
+    symmetric: bool = True
+    backend: str = "auto"
+    mesh: Any = None
+    options: tuple = ()
+
+    # -- introspection -----------------------------------------------------
+    def opt(self, key: str, default=None):
+        return dict(self.options).get(key, default)
+
+    def describe(self) -> str:
+        fname = getattr(self.f, "__name__", repr(self.f))
+        return (f"CurvaturePlan(f={fname}, n={self.n}, m={self.m}, "
+                f"csize={self.csize}, symmetric={self.symmetric}, "
+                f"backend={self.backend}, mesh={'yes' if self.mesh else 'no'})")
+
+    def backend_for(self, workload: str) -> str:
+        """Concrete backend name this plan resolves to for a workload."""
+        return resolve_backend(self, workload).name
+
+    def cache_key(self, workload: str, backend_name: str):
+        return (self.f, self.n, self.csize, self.symmetric, backend_name,
+                self.mesh, workload, self.options)
+
+    # -- compilation -------------------------------------------------------
+    def executable(self, workload: str) -> Callable:
+        """The cached jitted callable for ``workload``.
+
+        Cache hits return the SAME jit wrapper object, so jax's own trace
+        cache applies across plans with identical static signatures."""
+        spec = resolve_backend(self, workload)
+        key = self.cache_key(workload, spec.name)
+        fn = _EXECUTABLES.get(key)
+        if fn is None:
+            raw = spec.make(self, workload)
+
+            def traced(*arrays, _raw=raw, _key=key):
+                global _TOTAL_TRACES
+                _TRACE_COUNTS[_key] += 1   # increments at trace time only
+                _TOTAL_TRACES += 1
+                return _raw(*arrays)
+
+            fn = jax.jit(traced)
+            _EXECUTABLES[key] = fn
+            while len(_EXECUTABLES) > CACHE_MAXSIZE:
+                old_key, _ = _EXECUTABLES.popitem(last=False)
+                _TRACE_COUNTS.pop(old_key, None)
+        else:
+            _EXECUTABLES.move_to_end(key)
+        return fn
+
+    # -- workload entry points --------------------------------------------
+    def hvp(self, a, v):
+        """r = H_f(a) @ v (flat vectors, or pytrees on pytree backends)."""
+        return self.executable("hvp")(a, v)
+
+    def hessian(self, a):
+        """Dense (n, n) Hessian at a."""
+        return self.executable("hessian")(a)
+
+    def batched_hvp(self, A, V):
+        """(m, n), (m, n) -> (m, n): one HVP per instance."""
+        return self.executable("batched_hvp")(A, V)
+
+    def batched_hessian(self, A):
+        """(m, n) -> (m, n, n)."""
+        return self.executable("batched_hessian")(A)
+
+    def diag(self, params, key):
+        """Hutchinson diag(H) estimate on a parameter pytree."""
+        return self.executable("diag")(params, key)
+
+    def quadform(self, params, v, w=None):
+        """w^T H v with no reverse sweep (pytree backends)."""
+        exe = self.executable("quadform")
+        return exe(params, v, v if w is None else w)
+
+    def execute(self, *args):
+        """Single entry point: dispatch on argument shapes.
+
+          (a[n], v[n])       -> hvp
+          (A[m,n], V[m,n])   -> batched_hvp
+          (a[n],)            -> hessian
+          (A[m,n],)          -> batched_hessian
+          (params_tree, v_tree) with n=None -> hvp (pytree)
+        """
+        if self.n is None:
+            if len(args) != 2:
+                raise ValueError("pytree plans execute (params, v) -> Hv")
+            return self.hvp(*args)
+        import jax.numpy as jnp
+        args = tuple(jnp.asarray(x) for x in args)
+        nds = tuple(x.ndim for x in args)
+        if len(args) == 2:
+            if nds == (1, 1):
+                return self.hvp(*args)
+            if nds == (2, 2):
+                return self.batched_hvp(*args)
+        elif len(args) == 1:
+            if nds == (1,):
+                return self.hessian(args[0])
+            if nds == (2,):
+                return self.batched_hessian(args[0])
+        raise ValueError(
+            f"cannot infer workload from {len(args)} args with ndims {nds}")
+
+
+def _resolve_csize(f, n, m, csize, symmetric, backend, mesh, options):
+    if isinstance(csize, int):
+        # csize > n is legal: the chunk schedules pad the ragged tail
+        # (pre-engine behavior), so only nonsense values are rejected
+        if csize < 1:
+            raise ValueError(f"csize={csize} must be >= 1")
+        return csize
+    if csize == "auto":
+        if n is None:
+            return 4          # pytree workloads: probe-chunk default
+        return opmodel.model_csize(n, symmetric)
+    if csize == "autotune":
+        if n is None:
+            return 4
+        from .autotune import autotune_csize
+        return autotune_csize(f, n, m=m, symmetric=symmetric,
+                              backend=backend, mesh=mesh, options=options,
+                              workload="batched_hvp" if m else "hvp")
+    raise ValueError(f"csize must be int, 'auto' or 'autotune'; got {csize!r}")
+
+
+def plan(f, n=None, m=None, csize="auto", backend="auto", symmetric=True,
+         mesh=None, level=None, options=None, **extra_options):
+    """Build a CurvaturePlan (the engine's single planning entry point).
+
+    level : convenience alias for the paper's schedules -- "L0"/"L1"/"L2"
+            selects the matching vmap backend when backend is "auto".
+    options / **extra_options : backend tunables, must be hashable.
+    """
+    opts = dict(options or {})
+    opts.update(extra_options)
+    if level is not None:
+        if level not in ("L0", "L1", "L2"):
+            raise ValueError(f"unknown level {level!r}")
+        if backend == "auto" and mesh is None:
+            backend = f"vmap_{level.lower()}"
+        else:
+            opts.setdefault("level", level)
+    if n is not None:
+        n = int(n)
+    if m is not None:
+        m = int(m)
+    opt_items = tuple(sorted(opts.items()))
+    csize = _resolve_csize(f, n, m, csize, symmetric, backend, mesh,
+                           opt_items)
+    return CurvaturePlan(f=f, n=n, m=m, csize=int(csize),
+                         symmetric=bool(symmetric), backend=backend,
+                         mesh=mesh, options=opt_items)

@@ -1,0 +1,134 @@
+"""Backend registry for the CurvatureEngine.
+
+A *backend* is a named strategy for executing one or more curvature
+workloads.  Registering a backend is a one-file change: provide a factory
+``make(plan, workload) -> callable`` plus a capability declaration, and the
+planner's ``backend="auto"`` selection and the executable cache pick it up.
+
+Workloads (positional array signatures of the produced callable):
+
+  "hvp"             (a, v)   -> r          single instance, flat vectors
+  "hessian"         (a,)     -> H          dense Hessian, flat vector
+  "batched_hvp"     (A, V)   -> R          m instances, (m, n) arrays
+  "batched_hessian" (A,)     -> Hs         (m, n) -> (m, n, n)
+  "diag"            (params, key) -> tree  Hutchinson diag(H) on pytrees
+  "quadform"        (params, v, w) -> scalar  w^T H v, pure-forward
+
+Flat backends (``flat_only=True``) require ``plan.n`` to be a concrete int;
+pytree backends accept arbitrary parameter trees and are selected when
+``plan.n is None``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+__all__ = [
+    "BackendSpec", "register_backend", "get_backend", "list_backends",
+    "resolve_backend", "WORKLOADS",
+]
+
+WORKLOADS = ("hvp", "hessian", "batched_hvp", "batched_hessian", "diag",
+             "quadform")
+
+
+@dataclass(frozen=True)
+class BackendSpec:
+    """One executable strategy in the registry.
+
+    make(plan, workload) returns the raw (unjitted) callable for the
+    workload; the planner wraps it with the trace-counting jit and caches
+    the result.  ``supports`` may veto a (plan, workload) combination that
+    the static declaration alone cannot rule out (e.g. csize divisibility).
+    """
+    name: str
+    make: Callable
+    workloads: frozenset
+    priority: int = 0
+    requires_mesh: bool = False
+    flat_only: bool = True
+    supports: Optional[Callable] = None
+    doc: str = ""
+
+    def can_run(self, plan, workload: str) -> bool:
+        if workload not in self.workloads:
+            return False
+        if self.requires_mesh and plan.mesh is None:
+            return False
+        if self.flat_only and plan.n is None:
+            return False
+        if self.supports is not None and not self.supports(plan, workload):
+            return False
+        return True
+
+
+_REGISTRY: dict[str, BackendSpec] = {}
+_ENSURED = False
+
+
+def register_backend(spec: BackendSpec) -> BackendSpec:
+    """Idempotent by name: re-registration replaces (supports reload)."""
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def _ensure_builtin_backends() -> None:
+    """Import the modules that self-register backends.
+
+    Lazy so that `import repro.core` never pulls in the engine, while any
+    engine entry point sees the full registry.  Each import is tolerant of
+    missing optional deps (e.g. Pallas off-platform)."""
+    global _ENSURED
+    if _ENSURED:
+        return
+    # mandatory backends first; _ENSURED is only set once they are all in,
+    # so a failing import is retried (and its root cause re-raised) on the
+    # next engine call instead of leaving a half-populated registry
+    import repro.engine.backends  # noqa: F401  (reference / vmap / sharded)
+    import repro.core.curvature  # noqa: F401  (pytree backends)
+    try:
+        import repro.kernels.ops  # noqa: F401  (pallas, optional layer)
+    except Exception as e:  # pragma: no cover - pallas unavailable
+        # optional, but never silent: on TPU this is the production path
+        import warnings
+        warnings.warn(f"pallas backend unavailable "
+                      f"(repro.kernels.ops failed to import): {e!r}")
+    _ENSURED = True
+
+
+def get_backend(name: str) -> BackendSpec:
+    _ensure_builtin_backends()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def list_backends() -> dict[str, BackendSpec]:
+    _ensure_builtin_backends()
+    return dict(_REGISTRY)
+
+
+def resolve_backend(plan, workload: str) -> BackendSpec:
+    """Pick the backend for a (plan, workload) pair.
+
+    Explicit names are honored (error if incapable); "auto" picks the
+    highest-priority capable backend -- mesh-carrying plans prefer
+    ``sharded``, pytree plans fall through to the pytree backends."""
+    _ensure_builtin_backends()
+    if plan.backend != "auto":
+        spec = get_backend(plan.backend)
+        if not spec.can_run(plan, workload):
+            raise ValueError(
+                f"backend {spec.name!r} cannot run workload {workload!r} "
+                f"for plan {plan.describe()}")
+        return spec
+    candidates = [s for s in _REGISTRY.values() if s.can_run(plan, workload)]
+    if not candidates:
+        raise ValueError(
+            f"no registered backend supports workload {workload!r} for "
+            f"plan {plan.describe()}; registered: {sorted(_REGISTRY)}")
+    return max(candidates, key=lambda s: (s.priority, s.name))

@@ -1,8 +1,15 @@
-"""jit'd public wrappers for the Pallas kernels.
+"""jit'd public wrappers for the Pallas kernels + the engine's ``pallas``
+backend registration.
 
 ``interpret`` defaults to True off-TPU (the kernels are TPU-target; CPU runs
 them through the Pallas interpreter for correctness), and to False on TPU
 where Mosaic compiles them for real.
+
+Kernel-compatible forms of a target function are discovered via the
+``pallas_fn`` / ``pallas_consts`` attributes (see testfns.make_fletcher_
+powell) instead of hard-coded name dispatch: any hmath-written f whose
+value shape broadcasts over trailing instance axes runs as-is; functions
+needing constant coefficient refs attach an adapter.
 """
 
 from __future__ import annotations
@@ -13,34 +20,64 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import testfns
+from repro.engine.registry import BackendSpec, register_backend
 from repro.kernels.chess_hvp import chess_hvp_pallas
 from repro.kernels.hdual_linear import hdual_linear_pallas
 
 __all__ = ["chess_hvp", "hdual_linear", "hdual_linear_apply",
-           "default_interpret"]
+           "default_interpret", "kernel_form"]
 
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def kernel_form(f):
+    """(kernel_fn, consts) for any engine target function."""
+    return (getattr(f, "pallas_fn", f),
+            tuple(getattr(f, "pallas_consts", ())))
+
+
 def _fn_and_consts(function: str, n: int):
-    if function == "fletcher_powell":
-        A, B, E = testfns._fp_coeffs(n)
+    """Back-compat named lookup, now routed through the adapter protocol."""
+    return kernel_form(testfns.FUNCTIONS[function](n))
 
-        def f(y, A, B, E):
-            import repro.core.hmath as hm
-            s = hm.matvec_const(A, hm.sin(y))
-            c = hm.matvec_const(B, hm.cos(y))
-            # E broadcasts over any trailing instance axes of the value
-            # shape ((n,) on CPU oracle, (n, blk_m) inside the kernel)
-            Eb = E.reshape(E.shape + (1,) * (jnp.ndim(s.val) - 1))
-            r = (s + c) - Eb
-            return (r * r).sum(0)
 
-        return f, (A, B, E)
-    base = testfns.FUNCTIONS[function](n)
-    return (lambda y: base(y)), ()
+# ---------------------------------------------------------------------------
+# engine backend: the paper's Fig. 2 L2 kernel
+# ---------------------------------------------------------------------------
+
+def _pallas_supports(plan, workload):
+    # the kernel assumes csize | n (paper's assumption; no ragged tail);
+    # a mesh-carrying plan asked for sharding -- never steal it from the
+    # sharded backend even where pallas outranks it (TPU)
+    return (plan.mesh is None and plan.n is not None
+            and plan.n % plan.csize == 0)
+
+
+def _pallas_make(plan, workload):
+    kernel_f, consts = kernel_form(plan.f)
+    interpret = plan.opt("interpret")
+    if interpret is None:
+        interpret = default_interpret()
+    blk_m_opt = plan.opt("blk_m")
+
+    def run(A, V):
+        m = A.shape[0]                          # static at trace time
+        blk_m = blk_m_opt or max(b for b in (8, 4, 2, 1) if m % b == 0)
+        return chess_hvp_pallas(kernel_f, A, V, plan.csize, consts=consts,
+                                blk_m=blk_m, interpret=interpret)
+    return run
+
+
+register_backend(BackendSpec(
+    name="pallas", make=_pallas_make,
+    workloads=frozenset({"batched_hvp"}),
+    # Mosaic-compiled on TPU this is the fastest batched path; in CPU
+    # interpret mode it is a correctness path only, so auto never picks it
+    priority=40 if jax.default_backend() == "tpu" else -5,
+    supports=_pallas_supports,
+    doc="Fig. 2 L2 grid kernel (Pallas; interpret=True off-TPU)"))
 
 
 @partial(jax.jit, static_argnames=("function", "csize", "blk_m", "interpret"))

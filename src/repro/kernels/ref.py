@@ -11,15 +11,17 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import hvp
+from repro.core.api import hvp_impl
 
 __all__ = ["chess_hvp_ref", "hdual_linear_ref"]
 
 
 def chess_hvp_ref(f, A, V, csize: int, consts=()):
+    # raw schedule (oracle role): keep the reference path engine-free so
+    # kernel tests do not depend on the planner they help validate
     fn = (lambda y: f(y, *consts)) if consts else f
-    return jax.vmap(lambda a, v: hvp(fn, a, v, csize=csize,
-                                     symmetric=False))(A, V)
+    return jax.vmap(lambda a, v: hvp_impl(fn, a, v, csize=csize,
+                                          symmetric=False))(A, V)
 
 
 def hdual_linear_ref(x, w):

@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 __all__ = ["make_production_mesh", "SINGLE_POD", "MULTI_POD"]
 
 SINGLE_POD = {"shape": (16, 16), "axes": ("data", "model")}
@@ -21,11 +23,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     over DCN; "data" is FSDP/DP over ICI; "model" is TP."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(1, 1), axes=("data", "model")):
     """Tiny mesh over however many real devices exist (tests/examples)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

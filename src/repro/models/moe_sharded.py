@@ -28,10 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-try:
-    from jax import shard_map  # jax >= 0.8
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.compat import shard_map
 
 from repro.models.common import silu
 from repro.models.moe import moe_block, router_topk

@@ -3,12 +3,21 @@
 The paper motivates chunked Hessian-vector products with "optimization, an
 area where the Hessian-Vector product is heavily utilized" (§1/§7). This is
 that consumer: each Newton step solves  H p = -g  by conjugate gradients,
-where every CG iteration is ONE chunked HVP -- either
+where every CG iteration is ONE chunked HVP planned by the unified
+CurvatureEngine -- either
 
   engine="chessfad" : the paper's pure-forward chunked hDual HVP
-                      (core.api.hvp; f written against hmath), or
-  engine="fwdrev"   : jvp-over-grad through ONE jax.linearize, the
-                      reverse-mode path for arbitrary jnp objectives.
+                      (engine auto backend; f written against hmath);
+  engine="fwdrev"   : ONE jax.linearize of grad per Newton step, the CG
+                      loop applies only the linear map (jitted once per
+                      run; not a registry backend, since per-x linear
+                      maps cannot live in a per-f cache);
+
+or any registered engine backend name (e.g. "pytree_fwdrev",
+"reference").  Registry paths share the engine's executable cache across
+ALL outer iterations and across newton_cg calls with the same f/n/csize
+signature, so the HVP is traced once per signature instead of once per
+Newton step.
 
 Armijo backtracking line search; CG truncated at the Steihaug negative-
 curvature test, so the step is a descent direction even for nonconvex f
@@ -18,13 +27,12 @@ curvature test, so the step is a descent direction even for nonconvex f
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import hvp as chess_hvp
+from repro import engine as curvature_engine
 
 __all__ = ["newton_cg"]
 
@@ -72,15 +80,32 @@ def newton_cg(f: Callable, x0, *, engine: str = "chessfad", csize: int = 4,
     grad_f = jax.jit(jax.grad(f))
     val_f = jax.jit(f)
 
-    if engine == "chessfad":
-        hvp_at = lambda x: jax.jit(
-            lambda v, x=x: chess_hvp(f, x, v, csize=csize, symmetric=True))
-    elif engine == "fwdrev":
-        def hvp_at(x):
-            _, lin = jax.linearize(jax.grad(f), x)
-            return jax.jit(lin)
+    if engine == "fwdrev":
+        # shared linearization, jitted once per run: grad is traced once
+        # per Newton step and the CG loop applies only the linear tangent
+        # map -- not an engine backend (per-x linear maps cannot live in a
+        # per-f executable cache)
+        cg_solve = jax.jit(lambda x, g, tol: _cg(
+            jax.linearize(jax.grad(f), x)[1], g, cg_iters, tol))
     else:
-        raise ValueError(engine)
+        # registry path: one engine plan per run; its executable cache
+        # persists across outer iterations AND across newton_cg calls
+        # with the same static signature
+        backend = "auto" if engine == "chessfad" else engine
+        if backend != "auto":
+            try:
+                curvature_engine.get_backend(backend)  # fail fast on typos
+            except KeyError as e:
+                raise ValueError(str(e)) from None
+        if backend == "pytree_fwdrev":
+            hvp_plan = curvature_engine.plan(f, None, backend=backend)
+        else:
+            hvp_plan = curvature_engine.plan(f, x0.shape[-1], csize=csize,
+                                             symmetric=True,
+                                             backend=backend)
+
+        def cg_solve(x, g, tol):
+            return _cg(lambda v: hvp_plan.hvp(x, v), g, cg_iters, tol)
 
     x = x0
     traj = []
@@ -92,8 +117,7 @@ def newton_cg(f: Callable, x0, *, engine: str = "chessfad", csize: int = 4,
         traj.append({"iter": it, "f": fx, "gnorm": gnorm})
         if gnorm < grad_tol:
             break
-        hfn = hvp_at(x)
-        p = _cg(hfn, g, cg_iters, cg_tol * max(gnorm, 1.0))
+        p = cg_solve(x, g, cg_tol * max(gnorm, 1.0))
         n_hvp += cg_iters  # upper bound (while_loop may truncate earlier)
         # Armijo backtracking
         t = 1.0

@@ -24,10 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-try:
-    from jax import shard_map  # jax >= 0.8
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.compat import shard_map
 
 __all__ = ["stack_stages", "pipeline_forward"]
 

@@ -36,7 +36,7 @@ def test_hierarchical_grad_sync_compression():
     run_with_fake_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from functools import partial
-        from jax import shard_map
+        from repro.compat import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.parallel.collectives import hierarchical_grad_sync
 

@@ -1,0 +1,218 @@
+"""Unified CurvatureEngine acceptance tests: every registered backend must
+agree on batched HVPs for the paper's test functions, the csize planner
+must follow the §5 model, and the executable cache must prove ZERO retraces
+on a second plan with an identical static signature."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import ref, testfns
+
+FN = {
+    "rosenbrock": lambda n: testfns.rosenbrock,
+    "ackley": lambda n: testfns.ackley,
+    "fletcher_powell": testfns.make_fletcher_powell,
+}
+
+N, M, CSIZE = 8, 8, 2
+
+# acceptance: reference, vmap_l0/l1/l2, pallas-interpret, sharded (1-axis
+# host mesh) all agree on batched HVPs
+FLAT_BACKENDS = ["reference", "vmap_l0", "vmap_l1", "vmap_l2", "pallas",
+                 "sharded"]
+
+
+def _data(n, m, seed=0):
+    rng = np.random.RandomState(seed)
+    A = jnp.asarray(rng.uniform(-2, 2, (m, n)), jnp.float32)
+    V = jnp.asarray(rng.randn(m, n), jnp.float32)
+    return A, V
+
+
+def _host_mesh():
+    from repro.compat import make_mesh
+    return make_mesh((len(jax.devices()),), ("data",))
+
+
+@pytest.mark.parametrize("fname", sorted(FN))
+@pytest.mark.parametrize("backend", FLAT_BACKENDS)
+def test_all_backends_agree_on_batched_hvp(fname, backend):
+    f = FN[fname](N)
+    A, V = _data(N, M, seed=N)
+    mesh = _host_mesh() if backend == "sharded" else None
+    opts = {"interpret": True} if backend == "pallas" else {}
+    p = engine.plan(f, N, m=M, csize=CSIZE, backend=backend,
+                    symmetric=False, mesh=mesh, **opts)
+    out = p.batched_hvp(A, V)
+    want = jnp.stack([ref.hvp_fwdrev(f, A[i], V[i]) for i in range(M)])
+    err = jnp.abs(out - want).max() / (1.0 + jnp.abs(want).max())
+    assert float(err) <= 1e-4, (fname, backend, float(err))
+
+
+def test_symmetric_schedule_agrees():
+    f = FN["ackley"](N)
+    A, V = _data(N, M, seed=3)
+    p_sym = engine.plan(f, N, csize=CSIZE, symmetric=True)
+    p_non = engine.plan(f, N, csize=CSIZE, symmetric=False)
+    np.testing.assert_allclose(np.asarray(p_sym.batched_hvp(A, V)),
+                               np.asarray(p_non.batched_hvp(A, V)),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# cache: second identical plan performs zero retraces
+# ---------------------------------------------------------------------------
+
+def test_cache_zero_retrace_on_identical_signature():
+    engine.clear_cache()
+    f = FN["rosenbrock"](N)
+    A, V = _data(N, M, seed=1)
+
+    p1 = engine.plan(f, N, m=M, csize=CSIZE, symmetric=False)
+    key = p1.cache_key("batched_hvp", p1.backend_for("batched_hvp"))
+    assert engine.trace_count(key) == 0
+    r1 = p1.batched_hvp(A, V)
+    assert engine.trace_count(key) == 1          # first call traces once
+
+    p2 = engine.plan(f, N, m=M, csize=CSIZE, symmetric=False)
+    assert p2 is not p1
+    r2 = p2.execute(A, V)                        # single entry point
+    assert engine.trace_count(key) == 1          # ZERO retraces on cache hit
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2))
+
+    # a different static signature compiles its own executable
+    p3 = engine.plan(f, N, m=M, csize=4, symmetric=False)
+    p3.batched_hvp(A, V)
+    key3 = p3.cache_key("batched_hvp", p3.backend_for("batched_hvp"))
+    assert key3 != key
+    assert engine.trace_count(key3) == 1
+    assert engine.trace_count(key) == 1
+
+
+def test_facades_share_engine_cache():
+    """core.api.batched_hvp is a facade: repeated calls with one signature
+    reuse one executable."""
+    from repro.core.api import batched_hvp
+    engine.clear_cache()
+    f = FN["rosenbrock"](N)
+    A, V = _data(N, M, seed=2)
+    batched_hvp(f, A, V, csize=CSIZE, level="L2")
+    total_after_first = engine.trace_count()
+    batched_hvp(f, A, V, csize=CSIZE, level="L2")
+    assert engine.trace_count() == total_after_first
+
+
+# ---------------------------------------------------------------------------
+# planning: csize selection, backend resolution, dispatch
+# ---------------------------------------------------------------------------
+
+def test_auto_csize_follows_op_model():
+    for n in (8, 32, 128):
+        p = engine.plan(FN["rosenbrock"](n), n, csize="auto", symmetric=True)
+        assert p.csize == engine.model_csize(n, True)
+    # symmetric=False: smallest candidate within 10% of the CHUNK-HESS
+    # model minimum (state-size dial; see opmodel.model_csize)
+    p = engine.plan(FN["rosenbrock"](32), 32, csize="auto", symmetric=False)
+    assert p.csize == engine.model_csize(32, False)
+    best = min(engine.mults_chunk_hess(32, c, 1)
+               for c in engine.csize_candidates(32))
+    assert engine.mults_chunk_hess(32, p.csize, 1) <= 1.10 * best
+
+
+def test_autotune_returns_feasible_candidate():
+    f = FN["rosenbrock"](N)
+    c = engine.autotune_csize(f, N, m=8, reps=1)
+    assert c in engine.csize_candidates(N)
+    # memoized: second call returns instantly with the same answer
+    assert engine.autotune_csize(f, N, m=8, reps=1) == c
+    p = engine.plan(f, N, m=8, csize="autotune", symmetric=False)
+    assert p.csize == c
+
+
+def test_mesh_plans_resolve_to_sharded():
+    mesh = _host_mesh()
+    p = engine.plan(FN["rosenbrock"](N), N, m=M, csize=CSIZE, mesh=mesh,
+                    symmetric=False)
+    assert p.backend_for("batched_hvp") == "sharded"
+    # but non-batched workloads fall back to a capable backend
+    assert p.backend_for("hvp") != "sharded"
+
+
+def test_level_alias_maps_to_vmap_backends():
+    for level in ("L0", "L1", "L2"):
+        p = engine.plan(FN["rosenbrock"](N), N, csize=CSIZE, level=level)
+        assert p.backend_for("batched_hvp") == f"vmap_{level.lower()}"
+
+
+def test_execute_shape_dispatch():
+    f = FN["rosenbrock"](N)
+    A, V = _data(N, M, seed=4)
+    p = engine.plan(f, N, csize=CSIZE)
+    assert p.execute(A, V).shape == (M, N)
+    assert p.execute(A[0], V[0]).shape == (N,)
+    assert p.execute(A[0]).shape == (N, N)
+    assert p.execute(A).shape == (M, N, N)
+    with pytest.raises(ValueError):
+        p.execute(A, V, A)
+
+
+def test_csize_larger_than_n_pads():
+    """Pre-engine behavior: csize > n is legal (ragged tail is padded)."""
+    from repro.core.api import hvp
+    f = FN["rosenbrock"](2)
+    a = _data(2, 1, seed=6)[0][0]
+    v = _data(2, 1, seed=7)[1][0]
+    r = hvp(f, a, v, csize=4, symmetric=True)
+    np.testing.assert_allclose(np.asarray(r),
+                               np.asarray(ref.hvp_fwdrev(f, a, v)),
+                               rtol=2e-3, atol=2e-3)
+    with pytest.raises(ValueError):
+        engine.plan(f, 2, csize=0)
+
+
+def test_incapable_backend_raises():
+    p = engine.plan(FN["rosenbrock"](N), N, csize=CSIZE, backend="pallas")
+    with pytest.raises(ValueError):
+        p.executable("hessian")        # pallas only does batched_hvp
+    with pytest.raises(KeyError):
+        engine.get_backend("no_such_backend")
+    # pallas needs csize | n
+    p_bad = engine.plan(FN["rosenbrock"](6), 6, csize=4, backend="pallas")
+    with pytest.raises(ValueError):
+        p_bad.executable("batched_hvp")
+
+
+# ---------------------------------------------------------------------------
+# pytree backends share the same registry and cache
+# ---------------------------------------------------------------------------
+
+def test_pytree_backend_hvp_and_quadform():
+    f = FN["rosenbrock"](N)
+    A, V = _data(N, 2, seed=5)
+    a, v = A[0], V[0]
+    want = ref.hvp_fwdrev(f, a, v)
+    p = engine.plan(f, None, backend="pytree_fwdrev")
+    np.testing.assert_allclose(np.asarray(p.hvp(a, v)), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+    q = engine.plan(f, None, backend="pytree_fwd")
+    np.testing.assert_allclose(float(q.quadform(a, v)),
+                               float(v @ want), rtol=2e-3)
+
+
+def test_pytree_diag_workload():
+    def loss(p):
+        return (p["w"] ** 2).sum() * 0.5 + (p["b"] ** 4).sum()
+
+    params = {"w": jnp.asarray([1.0, 2.0, 3.0]),
+              "b": jnp.asarray([0.5, -0.5])}
+    p = engine.plan(loss, None, csize=2, backend="pytree_fwdrev",
+                    n_probes=4)
+    d = p.diag(params, jax.random.PRNGKey(0))
+    # diag(H) for this separable loss is exact under Rademacher probes
+    np.testing.assert_allclose(np.asarray(d["w"]), np.ones(3), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(d["b"]),
+                               np.asarray(12.0 * params["b"] ** 2),
+                               rtol=1e-4)

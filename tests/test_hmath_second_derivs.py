@@ -1,0 +1,100 @@
+"""hmath second-derivative coverage: every exported smooth op's hDual
+propagation vs ``jax.hessian`` of the jnp-native function on random
+in-domain points (satellite of the CurvatureEngine PR).
+
+Each op is composed as f(x) = op(scale * <w, x> + shift) so the Hessian
+op''(z) * scale^2 * w w^T is dense -- exercising the chain rule's
+g''(u) u_i u_j cross terms, not just the diagonal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.hmath as hm
+from repro.core.api import hessian as chess_hessian
+
+# name -> (hmath op, jnp-native op, in-domain z range)
+CASES = {
+    "sin": (hm.sin, jnp.sin, (-1.5, 1.5)),
+    "cos": (hm.cos, jnp.cos, (-1.5, 1.5)),
+    "tan": (hm.tan, jnp.tan, (-1.0, 1.0)),
+    "exp": (hm.exp, jnp.exp, (-1.5, 1.5)),
+    "log": (hm.log, jnp.log, (0.5, 3.0)),
+    "sqrt": (hm.sqrt, jnp.sqrt, (0.5, 3.0)),
+    "tanh": (hm.tanh, jnp.tanh, (-1.5, 1.5)),
+    "sigmoid": (hm.sigmoid, jax.nn.sigmoid, (-2.0, 2.0)),
+    "asin": (hm.asin, jnp.arcsin, (-0.8, 0.8)),
+    "acos": (hm.acos, jnp.arccos, (-0.8, 0.8)),
+    "atan": (hm.atan, jnp.arctan, (-1.5, 1.5)),
+    "sinh": (hm.sinh, jnp.sinh, (-1.5, 1.5)),
+    "cosh": (hm.cosh, jnp.cosh, (-1.5, 1.5)),
+    "erf": (hm.erf, jax.scipy.special.erf, (-1.5, 1.5)),
+    "log1p": (hm.log1p, jnp.log1p, (-0.5, 2.0)),
+    "expm1": (hm.expm1, jnp.expm1, (-1.5, 1.5)),
+    "square": (hm.square, jnp.square, (-2.0, 2.0)),
+    "abs": (hm.abs, jnp.abs, (0.5, 2.5)),       # away from the kink
+    "pow2.5": (lambda u: hm.pow(u, 2.5), lambda z: z ** 2.5, (0.5, 2.5)),
+    "recip": (lambda u: 1.0 / u, lambda z: 1.0 / z, (0.5, 2.5)),
+}
+
+N = 4
+
+
+def _point(name, seed_extra=0):
+    rng = np.random.RandomState((abs(hash(name)) + seed_extra) % 2 ** 31)
+    w = jnp.asarray(rng.uniform(0.2, 0.5, N), jnp.float32)
+    x = jnp.asarray(rng.uniform(-1.0, 1.0, N), jnp.float32)
+    return w, x
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+@pytest.mark.parametrize("csize", [1, 2, 4])
+def test_second_derivatives_match_jax_hessian(name, csize):
+    hf, jf, (lo, hi) = CASES[name]
+    w, x = _point(name, csize)
+    # scale/shift chosen so z = scale*<w,x> + shift stays inside [lo, hi]
+    wsum = float(jnp.abs(w).sum())
+    scale = (hi - lo) / (2.0 * wsum)
+    shift = (hi + lo) / 2.0
+
+    def f_h(u):
+        return hf(hm.dot_const(u, w) * scale + shift)
+
+    def f_j(z):
+        return jf(jnp.dot(z, w) * scale + shift)
+
+    H = chess_hessian(f_h, x, csize=csize, symmetric=True)
+    H_ref = jax.hessian(f_j)(x)
+    np.testing.assert_allclose(
+        np.asarray(H), np.asarray(H_ref), rtol=2e-3,
+        atol=2e-3 * (1.0 + float(jnp.abs(H_ref).max())), err_msg=name)
+
+
+@pytest.mark.parametrize("name", ["maximum", "minimum", "where"])
+def test_branch_ops_second_derivatives(name):
+    """Branch-select ops: second derivatives follow the taken branch."""
+    w, x = _point(name)
+
+    if name == "maximum":
+        f_h = lambda u: hm.maximum(hm.square(hm.dot_const(u, w)) + 2.0,
+                                   hm.dot_const(u, w))
+        f_j = lambda z: jnp.maximum(jnp.square(jnp.dot(z, w)) + 2.0,
+                                    jnp.dot(z, w))
+    elif name == "minimum":
+        f_h = lambda u: hm.minimum(hm.exp(hm.dot_const(u, w)) + 5.0,
+                                   hm.square(hm.dot_const(u, w)))
+        f_j = lambda z: jnp.minimum(jnp.exp(jnp.dot(z, w)) + 5.0,
+                                    jnp.square(jnp.dot(z, w)))
+    else:
+        f_h = lambda u: hm.where(hm.dot_const(u, w) > 10.0,
+                                 hm.dot_const(u, w),
+                                 hm.sin(hm.dot_const(u, w)))
+        f_j = lambda z: jnp.where(jnp.dot(z, w) > 10.0, jnp.dot(z, w),
+                                  jnp.sin(jnp.dot(z, w)))
+
+    H = chess_hessian(f_h, x, csize=2, symmetric=True)
+    H_ref = jax.hessian(f_j)(x)
+    np.testing.assert_allclose(
+        np.asarray(H), np.asarray(H_ref), rtol=2e-3,
+        atol=2e-3 * (1.0 + float(jnp.abs(H_ref).max())), err_msg=name)

@@ -11,8 +11,8 @@ def test_pipeline_matches_sequential():
         from functools import partial
         from repro.training.pipeline import pipeline_forward, stack_stages
 
-        mesh = jax.make_mesh((4, 2), ("pipe", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.compat import make_mesh as compat_make_mesh
+        mesh = compat_make_mesh((4, 2), ("pipe", "data"))
         L, B, D = 8, 16, 32
         rng = np.random.RandomState(0)
         params = {"w": jnp.asarray(rng.randn(L, D, D) * 0.1, jnp.float32),
@@ -55,16 +55,14 @@ def test_elastic_restart_across_meshes():
         rng = np.random.RandomState(0)
         tree = {"w": jnp.asarray(rng.randn(16, 8), jnp.float32),
                 "m": jnp.asarray(rng.randn(16, 8), jnp.float32)}
-        mesh_a = jax.make_mesh((2, 4), ("data", "model"),
-                               axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.compat import make_mesh as compat_make_mesh
+        mesh_a = compat_make_mesh((2, 4), ("data", "model"))
         tree_a = jax.tree.map(lambda x: jax.device_put(
             x, NamedSharding(mesh_a, P("data", "model"))), tree)
         with tempfile.TemporaryDirectory() as d:
             save_checkpoint(d, 3, tree_a)
             # 'cluster shrank': restore onto a DIFFERENT mesh topology
-            mesh_b = jax.make_mesh((4, 2), ("data", "model"),
-                                   axis_types=(jax.sharding.AxisType.Auto,)
-                                   * 2)
+            mesh_b = compat_make_mesh((4, 2), ("data", "model"))
             target = jax.tree.map(
                 lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
             shards = jax.tree.map(lambda x: NamedSharding(

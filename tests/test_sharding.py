@@ -10,8 +10,18 @@ from repro.models.params import param_table
 from repro.parallel.sharding import (ACTIVATION_RULES, PARAM_RULES,
                                      spec_for)
 
-MESH1 = AbstractMesh((16, 16), ("data", "model"))
-MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+# AbstractMesh's signature changed across JAX releases: newer versions take
+# positional (axis_sizes, axis_names), current 0.4.x takes one shape tuple of
+# (name, size) pairs.
+def _abstract_mesh(sizes, names):
+    try:
+        return AbstractMesh(tuple(zip(names, sizes)))
+    except TypeError:
+        return AbstractMesh(tuple(sizes), tuple(names))
+
+
+MESH1 = _abstract_mesh((16, 16), ("data", "model"))
+MESH2 = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_tp_dims_go_to_model():
