@@ -21,6 +21,7 @@ SUITES = {
     "kernel": "benchmarks.kernel_bench",    # Pallas layer
     "optimizer": "benchmarks.optimizer_compare",  # SophiaH/CHESSFAD vs AdamW
     "engine": "benchmarks.engine_bench",    # plan/execute csize selection
+    "service": "benchmarks.service_bench",  # async coalescing throughput
 }
 
 

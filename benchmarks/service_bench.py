@@ -1,0 +1,179 @@
+"""CurvatureService benchmark: coalesced throughput vs. request size and
+wait budget -- the latency/throughput dial for the serving layer.
+
+For each paper test function it measures:
+
+  baseline  : one-request-at-a-time execution (sequential ``plan.hvp`` for
+              size-1 requests, sequential ``plan.batched_hvp`` on each
+              request's own (s, n) slab for size-s requests) -- what
+              serving looks like with no coalescing layer.
+  coalesced : the same request stream pushed through a CurvatureService
+              (``plan.submit`` singles), for several ``max_wait_us``
+              budgets.
+
+Writes ``BENCH_pr2.json`` (repo root or $BENCH_SERVICE_OUT) with req/s,
+speedup ratios, and executed-bucket telemetry.  The headline acceptance
+number is ``speedup_at_size1``: coalesced / baseline throughput for
+single-HVP requests, which must clear 5x for the service to pay its way.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro import engine
+from repro.core import testfns
+
+N = 16
+FUNCS = ("rosenbrock", "ackley")
+REQUESTS = 1024
+REQUEST_SIZES = (1, 4, 16)
+WAIT_BUDGETS_US = (50.0, 200.0, 1000.0)
+MAX_BATCH = 256
+REPS = 5          # best-of: throughput measurements take the max over reps
+                  # (min-latency convention; shields CI from scheduler noise)
+
+
+def _data(n, total, seed=0):
+    # host arrays: serving payloads arrive as host data, and the service's
+    # fast path is numpy-in (it marshals buckets to the device itself)
+    rng = np.random.RandomState(seed)
+    A = np.asarray(rng.uniform(-2, 2, (total, n)), np.float32)
+    V = np.asarray(rng.randn(total, n), np.float32)
+    return A, V
+
+
+def _warm_buckets(plan, A, V, max_batch):
+    """Compile every bucket shape the dispatcher can produce, up front:
+    steady-state serving never traces, so the timed stream must not either.
+    The top bucket is bucket_size(min(requests, max_batch)) -- a partial
+    batch PADS UP, so stopping at the largest power of two <= requests
+    would leave one compilable shape in the timed region."""
+    top = engine.bucket_size(min(max_batch, A.shape[0]), max_batch)
+    b = 1
+    while b <= top:
+        k = min(b, A.shape[0])
+        Ab = jnp.asarray(engine.pad_rows(A[:k], b))
+        Vb = jnp.asarray(engine.pad_rows(V[:k], b))
+        jax.block_until_ready(plan.batched_hvp(Ab, Vb))
+        b *= 2
+
+
+def _baseline_rps(plan, A, V, size, reps=REPS):
+    """Sequential one-request-at-a-time; each request is its own call.
+    Best-of-``reps`` passes over the stream."""
+    total = A.shape[0]
+    best = 0.0
+    if size == 1:
+        jax.block_until_ready(plan.hvp(A[0], V[0]))
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for i in range(total):
+                jax.block_until_ready(plan.hvp(A[i], V[i]))
+            best = max(best, total / (time.perf_counter() - t0))
+    else:
+        jax.block_until_ready(
+            plan.batched_hvp(jnp.asarray(A[:size]), jnp.asarray(V[:size])))
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for i in range(0, total - size + 1, size):
+                jax.block_until_ready(
+                    plan.batched_hvp(jnp.asarray(A[i:i + size]),
+                                     jnp.asarray(V[i:i + size])))
+            best = max(best, total / (time.perf_counter() - t0))
+    return best
+
+
+def _coalesced_rps(plan, A, V, max_wait_us, reps=REPS):
+    """All requests stream through the service as singles (warm buckets).
+    Best-of-``reps`` passes; stats come from the best pass."""
+    total = A.shape[0]
+    _warm_buckets(plan, A, V, MAX_BATCH)
+    best, best_stats = 0.0, None
+    for _ in range(reps):
+        with engine.CurvatureService(max_batch=MAX_BATCH,
+                                     max_wait_us=max_wait_us) as svc:
+            t0 = time.perf_counter()
+            futs = [svc.submit(plan, A[i], V[i]) for i in range(total)]
+            for fut in futs:
+                fut.result()
+            dt = time.perf_counter() - t0
+            stats = svc.stats()
+        if total / dt > best:
+            best, best_stats = total / dt, stats
+    return best, best_stats
+
+
+def run(n=N, funcs=FUNCS, requests=REQUESTS, sizes=REQUEST_SIZES,
+        waits=WAIT_BUDGETS_US, out_path=None):
+    records = []
+    for fname in funcs:
+        f = testfns.FUNCTIONS[fname](n)
+        # serving recipe (docs/autotune.md): pay the one-shot csize tune up
+        # front, then every bucket reuses the winner for the process life
+        plan = engine.plan(f, n, m=requests, csize="autotune",
+                           symmetric=False)
+        A, V = _data(n, requests, seed=n)
+
+        baselines = {s: _baseline_rps(plan, A, V, s) for s in sizes}
+        coalesced = {}
+        buckets = {}
+        for w in waits:
+            rps, stats = _coalesced_rps(plan, A, V, w)
+            coalesced[w] = rps
+            buckets[w] = {str(b): c for b, c in
+                          sorted(stats["buckets"].items())}
+        best_wait = max(coalesced, key=coalesced.get)
+        speedup1 = coalesced[best_wait] / baselines[1]
+        emit(f"service/{fname}/n{n}/speedup_at_size1",
+             f"{speedup1:.1f}",
+             f"coalesced {coalesced[best_wait]:,.0f} req/s "
+             f"(wait={best_wait:g}us) vs sequential "
+             f"{baselines[1]:,.0f} req/s")
+        records.append({
+            "function": fname, "n": n, "requests": requests,
+            "max_batch": MAX_BATCH,
+            "backend": plan.backend_for("batched_hvp"),
+            "csize": plan.csize,
+            "baseline_rps_by_request_size": {
+                str(s): round(r, 1) for s, r in baselines.items()},
+            "coalesced_rps_by_wait_us": {
+                str(int(w)): round(r, 1) for w, r in coalesced.items()},
+            "buckets_by_wait_us": {str(int(w)): b
+                                   for w, b in buckets.items()},
+            "speedup_at_size1": round(float(speedup1), 2),
+            "best_wait_us": float(best_wait),
+        })
+
+    worst = min(r["speedup_at_size1"] for r in records)
+    emit("service/worst_speedup_at_size1", f"{worst:.1f}",
+         "acceptance floor is 5x")
+    out = {
+        "bench": "service_coalescing",
+        "worst_speedup_at_size1": worst,
+        "records": records,
+    }
+    path = out_path or os.environ.get("BENCH_SERVICE_OUT", "BENCH_pr2.json")
+    with open(path, "w") as fh:
+        json.dump(out, fh, indent=2)
+        fh.write("\n")
+    emit("service/bench_json", path, f"{len(records)} records")
+    return out
+
+
+def main(quick: bool = False):
+    if quick:
+        run(requests=128, sizes=(1, 4), waits=(200.0, 1000.0))
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

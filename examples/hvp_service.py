@@ -1,21 +1,23 @@
-"""The paper's headline workload as a service: a large batch of independent
-Hessian-vector products on standard test functions, planned and executed by
-the unified CurvatureEngine -- the CPU-scaled stand-in for the paper's
-0.5M-instance A100 run (§7).
+"""The paper's headline workload as a SERVICE: many small clients, one
+device, one coalescing dispatcher.
 
-The engine owns every scheduling decision the old flags hard-coded: csize
-("auto" = §5 op model, "autotune" = one-shot microbenchmark), backend
-("auto", or any of reference / vmap_l0 / vmap_l1 / vmap_l2 / pallas /
-sharded), and the executable cache (repeat requests with the same signature
-never retrace -- the serving property).
+The paper evaluates 0.5M independent HVPs as one pre-built batch (§7); a
+real serving deployment receives them as single-point requests from many
+concurrent clients.  This example spawns ``--clients`` threads that each
+fire ``--requests`` single HVP requests through ``plan.submit`` -- the
+CurvatureService coalesces whatever is in flight into padded power-of-two
+micro-batches and executes them with the engine's cached batched
+executables.  Compare against ``--no-service`` (one-request-at-a-time
+plan.hvp calls) to see the coalescing win.
 
-    PYTHONPATH=src python examples/hvp_service.py --n 16 --instances 4096 \
-        --function ackley --backend auto --csize auto
-    PYTHONPATH=src python examples/hvp_service.py --backend pallas
-    PYTHONPATH=src python examples/hvp_service.py --mesh   # shard over devices
+    PYTHONPATH=src python examples/hvp_service.py --n 16 --clients 8 \
+        --requests 256 --function ackley --backend auto --csize auto
+    PYTHONPATH=src python examples/hvp_service.py --max-wait-us 1000
+    PYTHONPATH=src python examples/hvp_service.py --no-service   # baseline
 """
 
 import argparse
+import threading
 import time
 
 import jax
@@ -26,57 +28,115 @@ from repro import engine
 from repro.core import testfns
 
 
+def run_baseline(plan, A, V):
+    """One-request-at-a-time: what serving looks like without coalescing."""
+    jax.block_until_ready(plan.hvp(A[0], V[0]))          # compile + warmup
+    t0 = time.perf_counter()
+    outs = [jax.block_until_ready(plan.hvp(A[i], V[i]))
+            for i in range(A.shape[0])]
+    return outs, time.perf_counter() - t0
+
+
+def warm_buckets(plan, A, V, max_batch):
+    """Compile the bucket executables up front: steady-state serving never
+    traces, so the demo times dispatch, not compilation.  Warms through
+    bucket_size(min(requests, max_batch)) because partial batches pad UP to
+    the next power of two."""
+    top = engine.bucket_size(min(max_batch, A.shape[0]), max_batch)
+    b = 1
+    while b <= top:
+        k = min(b, A.shape[0])
+        jax.block_until_ready(plan.batched_hvp(engine.pad_rows(A[:k], b),
+                                               engine.pad_rows(V[:k], b)))
+        b *= 2
+
+
+def run_service(plan, A, V, clients, max_batch, max_wait_us):
+    """Many client threads submitting singles; one coalescing dispatcher."""
+    total = A.shape[0]
+    warm_buckets(plan, A, V, max_batch)
+    results = [None] * total
+    svc = engine.CurvatureService(max_batch=max_batch,
+                                  max_wait_us=max_wait_us)
+
+    def client(cid):
+        futs = [(i, svc.submit(plan, A[i], V[i]))
+                for i in range(cid, total, clients)]
+        for i, fut in futs:
+            results[i] = fut.result()
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dt = time.perf_counter() - t0
+    stats = svc.stats()
+    svc.shutdown()
+    return results, dt, stats
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--function", default="rosenbrock",
                     choices=list(testfns.FUNCTIONS))
     ap.add_argument("--n", type=int, default=16)
-    ap.add_argument("--instances", type=int, default=4096)
+    ap.add_argument("--requests", type=int, default=1024,
+                    help="total single-HVP requests across all clients")
+    ap.add_argument("--clients", type=int, default=8,
+                    help="concurrent client threads")
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--max-wait-us", type=float, default=200.0,
+                    help="latency budget before a partial bucket flushes")
     ap.add_argument("--csize", default="auto",
                     help="int, 'auto' (§5 model) or 'autotune' (measured)")
     ap.add_argument("--backend", default="auto",
                     help=f"one of: auto, {', '.join(sorted(engine.list_backends()))}")
-    ap.add_argument("--level", default=None, choices=["L0", "L1", "L2"],
-                    help="legacy schedule alias (maps to vmap_l* backends)")
-    ap.add_argument("--kernel", action="store_true",
-                    help="legacy alias for --backend pallas")
-    ap.add_argument("--mesh", action="store_true",
-                    help="shard instances over a device mesh (L0)")
+    ap.add_argument("--no-service", action="store_true",
+                    help="sequential one-request-at-a-time baseline only")
     args = ap.parse_args()
 
-    n, m = args.n, args.instances
+    n, total = args.n, args.requests
     csize = args.csize if args.csize in ("auto", "autotune") \
         else int(args.csize)
-    # precedence matches the pre-engine service: --mesh wins over --kernel
-    backend = "pallas" if args.kernel and not args.mesh else args.backend
-    from repro.compat import make_mesh
-    mesh = make_mesh((len(jax.devices()),), ("data",)) if args.mesh \
-        else None
     f = testfns.FUNCTIONS[args.function](n)
     rng = np.random.RandomState(0)
-    A = jnp.asarray(rng.uniform(-2, 2, (m, n)), jnp.float32)
-    V = jnp.asarray(rng.randn(m, n), jnp.float32)
+    # host arrays: serving payloads arrive as host data, and the service
+    # marshals each bucket to the device as one array
+    A = np.asarray(rng.uniform(-2, 2, (total, n)), np.float32)
+    V = np.asarray(rng.randn(total, n), np.float32)
 
-    plan = engine.plan(f, n, m=m, csize=csize, backend=backend, mesh=mesh,
-                       level=args.level, symmetric=False)
-    resolved = plan.backend_for("batched_hvp")
+    plan = engine.plan(f, n, m=total, csize=csize, backend=args.backend,
+                       symmetric=False)
+    print(f"{args.function} n={n} requests={total} csize={plan.csize} "
+          f"backend={plan.backend_for('batched_hvp')}")
 
-    out = jax.block_until_ready(plan.batched_hvp(A, V))  # compile + warmup
-    t0 = time.perf_counter()
-    out = jax.block_until_ready(plan.batched_hvp(A, V))
-    dt = time.perf_counter() - t0
-    print(f"{args.function} n={n} m={m} csize={plan.csize} "
-          f"backend={resolved}{' mesh' if args.mesh else ''}")
-    print(f"  {dt * 1e3:.1f} ms total, {dt / m * 1e6:.2f} us/point, "
-          f"finite={bool(jnp.isfinite(out).all())}")
-    # serving property: an identical re-plan is a pure cache hit
-    t0 = time.perf_counter()
-    plan2 = engine.plan(f, n, m=m, csize=plan.csize, backend=backend,
-                        mesh=mesh, level=args.level, symmetric=False)
-    jax.block_until_ready(plan2.batched_hvp(A, V))
-    dt2 = time.perf_counter() - t0
-    print(f"  re-plan + execute (cache hit): {dt2 * 1e3:.1f} ms, "
-          f"total traces={engine.trace_count()}")
+    base_out, base_dt = run_baseline(plan, A, V)
+    base_rps = total / base_dt
+    print(f"  baseline (sequential plan.hvp): {base_dt * 1e3:.1f} ms, "
+          f"{base_rps:,.0f} req/s")
+    if args.no_service:
+        return
+
+    svc_out, svc_dt, stats = run_service(plan, A, V, args.clients,
+                                         args.max_batch, args.max_wait_us)
+    svc_rps = total / svc_dt
+    err = max(float(jnp.abs(s - b).max())
+              for s, b in zip(svc_out, base_out))
+    buckets = ", ".join(f"{b}x{c}" for b, c in sorted(stats["buckets"].items()))
+    print(f"  service ({args.clients} clients, max_batch={args.max_batch}, "
+          f"max_wait_us={args.max_wait_us:g}): {svc_dt * 1e3:.1f} ms, "
+          f"{svc_rps:,.0f} req/s -- {svc_rps / base_rps:.1f}x")
+    print(f"  {stats['batches']} micro-batches (bucket x count: {buckets}), "
+          f"{stats['padded_rows']} padded rows, max |serve - direct| = "
+          f"{err:.2e}")
+    for rec in engine.execution_stats():
+        per_bucket = {b: round(v["us_per_point_mean"], 1)
+                      for b, v in rec["by_bucket"].items()}
+        print(f"  telemetry [{rec['backend']}/{rec['workload']}] "
+              f"us/point by bucket: {per_bucket}")
 
 
 if __name__ == "__main__":

@@ -244,6 +244,9 @@ def batched_hvp_impl(f, A, V, csize: int = 1, level: str = "L2",
 # ---------------------------------------------------------------------------
 
 def _plan(f, n, csize, symmetric, backend="auto", m=None):
+    # m is a HINT ONLY (backend selection + autotune probe shaping); the
+    # batch extent an executable runs at comes from the array shapes at
+    # call time.  plan() rejects m=0 -- "no batching" is m=None.
     from repro.engine import plan as engine_plan
     return engine_plan(f, n, m=m, csize=csize, symmetric=symmetric,
                        backend=backend)
@@ -266,7 +269,12 @@ def hvp(f, a, v, csize=1, symmetric: bool = True):
 def batched_hvp(f, A, V, csize=1, level: str = "L2",
                 symmetric: bool = False):
     """HVPs for m instances under the paper's L0/L1/L2 schedule; the level
-    maps onto the matching engine backend (vmap_l0/l1/l2)."""
+    maps onto the matching engine backend (vmap_l0/l1/l2).
+
+    The batch extent is A.shape[0] -- the facade forwards it to the engine
+    only as the plan's ``m`` hint (backend selection / autotune); it does
+    NOT split or re-batch the arrays.  For coalescing many single-instance
+    requests into batches, use ``engine.plan(...).submit`` instead."""
     if level not in ("L0", "L1", "L2"):
         raise ValueError(f"unknown level {level!r}")
     A = jnp.asarray(A)
@@ -276,7 +284,10 @@ def batched_hvp(f, A, V, csize=1, level: str = "L2",
 
 
 def batched_hessian(f, A, csize=1, symmetric: bool = True):
-    """Dense Hessians for m instances (m, n) -> (m, n, n)."""
+    """Dense Hessians for m instances (m, n) -> (m, n, n).
+
+    As with ``batched_hvp``, A.shape[0] is forwarded only as the plan's
+    ``m`` hint; the arrays themselves define the batch."""
     A = jnp.asarray(A)
     return _plan(f, A.shape[-1], csize, symmetric,
                  m=A.shape[0]).batched_hessian(A)

@@ -11,6 +11,9 @@ engine makes the scheduling decision explicit, cached, and tunable:
     R  = p.batched_hvp(A, V)      # m instances
     r2 = p.execute(a, v)          # shape-dispatched single entry point
 
+    fut = p.submit(a, v)          # async: coalesced with concurrent submits
+    r3  = fut.result()            # == p.hvp(a, v), served from a micro-batch
+
 Planning decisions:
   csize   : "auto" -> paper §5 scalar-op model argmin;
             "autotune" -> one-shot microbenchmark; or an explicit int.
@@ -24,21 +27,39 @@ Executables are cached process-wide on (f, n, csize, symmetric, backend,
 mesh, workload, options): repeated plans with the same static signature
 never retrace.  ``register_backend`` makes "add a backend" a one-file
 change; ``list_backends()`` shows what is live.
+
+Serving: ``plan.submit(a, v)`` routes through the process-wide
+``CurvatureService`` (engine/service.py), which coalesces concurrent
+single-point requests into padded power-of-two micro-batches executed by
+the same cached executables -- ``max_batch`` / ``max_wait_us`` are the
+latency/throughput dial.  Every executed bucket reports measured us/point
+to the registry telemetry (``execution_stats()``).
+
+Narrative docs: docs/architecture.md (plan/execute + service lifecycle),
+docs/backends.md (capability matrix), docs/autotune.md (csize selection),
+docs/paper_map.md (paper section -> module).
 """
 
 from .plan import (CurvaturePlan, plan, clear_cache, trace_count,
-                   cache_size)
+                   cache_size, bucket_size, pad_rows)
 from .registry import (BackendSpec, register_backend, get_backend,
-                       list_backends, resolve_backend, WORKLOADS)
+                       list_backends, resolve_backend, WORKLOADS,
+                       record_execution, execution_stats, clear_telemetry)
 from .opmodel import (model_csize, csize_candidates, mults_chunk_hess,
                       mults_schunk_hess, count_jaxpr_ops, LANE_WIDTH)
 from .autotune import autotune_csize, clear_autotune_cache
+from .service import (CurvatureService, ServiceClosed, ServiceQueueFull,
+                      get_service, configure_service, shutdown_service)
 
 __all__ = [
     "CurvaturePlan", "plan", "clear_cache", "trace_count", "cache_size",
+    "bucket_size", "pad_rows",
     "BackendSpec", "register_backend", "get_backend", "list_backends",
     "resolve_backend", "WORKLOADS",
+    "record_execution", "execution_stats", "clear_telemetry",
     "model_csize", "csize_candidates", "mults_chunk_hess",
     "mults_schunk_hess", "count_jaxpr_ops", "LANE_WIDTH",
     "autotune_csize", "clear_autotune_cache",
+    "CurvatureService", "ServiceClosed", "ServiceQueueFull",
+    "get_service", "configure_service", "shutdown_service",
 ]

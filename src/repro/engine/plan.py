@@ -11,11 +11,29 @@ paper's per-csize template instantiation, now engine-managed).
 
 Every executable is wrapped with a trace counter; tests assert zero
 retraces on cache hits via ``trace_count``.
+
+Serving entry point: ``plan.submit(a, v=None)`` hands a single request to
+the process-wide ``CurvatureService`` (see ``engine/service.py``) and
+returns a ``concurrent.futures.Future``.  The service coalesces concurrent
+submits into padded power-of-two micro-batches executed through the same
+cached ``batched_hvp`` / ``batched_hessian`` executables -- the padding
+helpers (``bucket_size``, ``pad_rows``) live here because bucketing is a
+planning decision: power-of-two buckets bound the number of shapes one
+executable specializes on to log2(max_batch).
+
+Usage::
+
+    p = plan(f, n, csize="auto", backend="auto")
+    fut = p.submit(a, v)          # coalesced with other in-flight requests
+    r = fut.result()              # == p.hvp(a, v)
+
+See docs/architecture.md for the full lifecycle.
 """
 
 from __future__ import annotations
 
 import collections
+import threading
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
@@ -25,7 +43,7 @@ from . import opmodel
 from .registry import resolve_backend
 
 __all__ = ["CurvaturePlan", "plan", "clear_cache", "trace_count",
-           "cache_size", "CACHE_MAXSIZE"]
+           "cache_size", "CACHE_MAXSIZE", "bucket_size", "pad_rows"]
 
 # LRU-bounded: cache keys strong-reference f, so per-call closures (e.g.
 # block_hessian's f_of_block) would otherwise pin one jitted executable
@@ -34,14 +52,19 @@ CACHE_MAXSIZE = 512
 _EXECUTABLES: collections.OrderedDict = collections.OrderedDict()
 _TRACE_COUNTS: collections.Counter = collections.Counter()
 _TOTAL_TRACES: int = 0           # monotonic; survives LRU eviction
+# the CurvatureService dispatcher executes plans from its own thread while
+# clients keep calling plan.hvp/... directly -- the get/move_to_end and
+# insert/evict sequences below must be atomic
+_CACHE_LOCK = threading.Lock()
 
 
 def clear_cache() -> None:
     """Drop every cached executable and trace count (tests / memory)."""
     global _TOTAL_TRACES
-    _EXECUTABLES.clear()
-    _TRACE_COUNTS.clear()
-    _TOTAL_TRACES = 0
+    with _CACHE_LOCK:
+        _EXECUTABLES.clear()
+        _TRACE_COUNTS.clear()
+        _TOTAL_TRACES = 0
 
 
 def cache_size() -> int:
@@ -55,6 +78,52 @@ def trace_count(key=None) -> int:
     if key is None:
         return _TOTAL_TRACES
     return _TRACE_COUNTS[key]
+
+
+# ---------------------------------------------------------------------------
+# micro-batch bucketing (used by the CurvatureService dispatcher)
+# ---------------------------------------------------------------------------
+
+def bucket_size(k: int, max_batch: Optional[int] = None) -> int:
+    """Smallest power of two >= k (optionally capped at ``max_batch``).
+
+    Coalesced micro-batches are padded up to a bucket so one cached
+    executable specializes on at most log2(max_batch) distinct batch shapes
+    instead of one shape per observed request count."""
+    if k < 1:
+        raise ValueError(f"bucket_size: k={k} must be >= 1")
+    if max_batch is not None and k > max_batch:
+        raise ValueError(f"bucket_size: k={k} exceeds max_batch={max_batch}")
+    b = 1
+    while b < k:
+        b *= 2
+    if max_batch is not None:
+        b = min(b, max_batch)
+    return b
+
+
+def pad_rows(X, bucket: int):
+    """Pad a stacked (k, ...) array up to ``bucket`` rows by replicating the
+    last row.  Edge replication (not zeros) keeps the padding inside the
+    function's domain -- e.g. Ackley's sqrt is non-differentiable at the
+    origin, so zero rows would inject NaNs that pollute profiling even
+    though padded outputs are discarded.
+
+    numpy in -> numpy out (the service pads on the host and ships ONE
+    array per bucket to the device); jax arrays stay jax."""
+    import numpy as np
+    if isinstance(X, np.ndarray):
+        xp = np
+    else:
+        import jax.numpy as xp
+        X = xp.asarray(X)
+    k = X.shape[0]
+    if k > bucket:
+        raise ValueError(f"pad_rows: {k} rows exceed bucket {bucket}")
+    if k == bucket:
+        return X
+    pad = xp.broadcast_to(X[-1:], (bucket - k,) + X.shape[1:])
+    return xp.concatenate([X, pad], axis=0)
 
 
 @dataclass(frozen=True)
@@ -111,24 +180,26 @@ class CurvaturePlan:
         cache applies across plans with identical static signatures."""
         spec = resolve_backend(self, workload)
         key = self.cache_key(workload, spec.name)
-        fn = _EXECUTABLES.get(key)
-        if fn is None:
-            raw = spec.make(self, workload)
+        with _CACHE_LOCK:
+            fn = _EXECUTABLES.get(key)
+            if fn is None:
+                raw = spec.make(self, workload)
 
-            def traced(*arrays, _raw=raw, _key=key):
-                global _TOTAL_TRACES
-                _TRACE_COUNTS[_key] += 1   # increments at trace time only
-                _TOTAL_TRACES += 1
-                return _raw(*arrays)
+                def traced(*arrays, _raw=raw, _key=key):
+                    global _TOTAL_TRACES
+                    with _CACHE_LOCK:      # trace time only, never nested
+                        _TRACE_COUNTS[_key] += 1
+                        _TOTAL_TRACES += 1
+                    return _raw(*arrays)
 
-            fn = jax.jit(traced)
-            _EXECUTABLES[key] = fn
-            while len(_EXECUTABLES) > CACHE_MAXSIZE:
-                old_key, _ = _EXECUTABLES.popitem(last=False)
-                _TRACE_COUNTS.pop(old_key, None)
-        else:
-            _EXECUTABLES.move_to_end(key)
-        return fn
+                fn = jax.jit(traced)
+                _EXECUTABLES[key] = fn
+                while len(_EXECUTABLES) > CACHE_MAXSIZE:
+                    old_key, _ = _EXECUTABLES.popitem(last=False)
+                    _TRACE_COUNTS.pop(old_key, None)
+            else:
+                _EXECUTABLES.move_to_end(key)
+            return fn
 
     # -- workload entry points --------------------------------------------
     def hvp(self, a, v):
@@ -155,6 +226,29 @@ class CurvaturePlan:
         """w^T H v with no reverse sweep (pytree backends)."""
         exe = self.executable("quadform")
         return exe(params, v, v if w is None else w)
+
+    # -- async serving -----------------------------------------------------
+    def submit(self, a, v=None, *, service=None, block=True, timeout=None):
+        """Submit one request to the coalescing CurvatureService.
+
+        Returns a ``concurrent.futures.Future``:
+
+          submit(a, v) -> future of H_f(a) @ v      (coalesced batched_hvp)
+          submit(a)    -> future of the dense H(a)  (coalesced batched_hessian)
+
+        Requests from concurrent callers that share this plan's signature
+        are padded into one power-of-two micro-batch and executed by the
+        same cached executable ``batched_hvp`` / ``batched_hessian`` use.
+        ``service`` overrides the process-default service; ``block``/
+        ``timeout`` control backpressure when its queue is full."""
+        if service is None:
+            service = self.service()
+        return service.submit(self, a, v, block=block, timeout=timeout)
+
+    def service(self):
+        """The process-default CurvatureService (created on first use)."""
+        from .service import get_service
+        return get_service()
 
     def execute(self, *args):
         """Single entry point: dispatch on argument shapes.
@@ -228,6 +322,14 @@ def plan(f, n=None, m=None, csize="auto", backend="auto", symmetric=True,
         n = int(n)
     if m is not None:
         m = int(m)
+        if m < 1:
+            # m is a HINT (backend selection / autotune probe shaping), not
+            # a batch spec -- m=0 is always a bug, not "no batching"
+            raise ValueError(
+                f"m={m} must be >= 1; m is a batch-size hint for backend "
+                "selection and autotune only (batch extent comes from the "
+                "array shapes at execute time) -- omit it entirely for "
+                "single-instance plans")
     opt_items = tuple(sorted(opts.items()))
     csize = _resolve_csize(f, n, m, csize, symmetric, backend, mesh,
                            opt_items)

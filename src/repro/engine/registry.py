@@ -21,12 +21,15 @@ pytree backends accept arbitrary parameter trees and are selected when
 
 from __future__ import annotations
 
+import collections
+import threading
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 __all__ = [
     "BackendSpec", "register_backend", "get_backend", "list_backends",
     "resolve_backend", "WORKLOADS",
+    "record_execution", "execution_stats", "clear_telemetry",
 ]
 
 WORKLOADS = ("hvp", "hessian", "batched_hvp", "batched_hessian", "diag",
@@ -110,6 +113,79 @@ def get_backend(name: str) -> BackendSpec:
 def list_backends() -> dict[str, BackendSpec]:
     _ensure_builtin_backends()
     return dict(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# execution telemetry
+# ---------------------------------------------------------------------------
+#
+# Every executed bucket can be reported here: (plan signature, backend,
+# workload) -> measured us/point samples, tagged with the padded bucket size.
+# The CurvatureService records each dispatch; anything else (benchmarks,
+# autotune) may too.  This is the history that a future ``backend="auto"``
+# can learn from instead of static priorities (ROADMAP: "Backend
+# auto-selection telemetry") -- for now it is record + read, selection is
+# unchanged.
+
+_TELEMETRY_MAXSAMPLES = 256          # ring buffer per (signature, bucket)
+_TELEMETRY: collections.OrderedDict = collections.OrderedDict()
+_TELEMETRY_MAXKEYS = 512             # keys strong-reference f: LRU-bound
+_TELEMETRY_LOCK = threading.Lock()
+
+
+def clear_telemetry() -> None:
+    with _TELEMETRY_LOCK:
+        _TELEMETRY.clear()
+
+
+def record_execution(signature, backend: str, workload: str, *,
+                     bucket: int, n_points: int, elapsed_s: float) -> None:
+    """Record one executed bucket: ``n_points`` real points served by an
+    executable padded to ``bucket`` rows in ``elapsed_s`` seconds.
+
+    ``signature`` is the plan's executable cache key (hashable); us/point is
+    charged to the REAL points, so padding waste shows up as a higher
+    us/point at ragged sizes.  Thread-safe: the service dispatcher calls
+    this from its own thread."""
+    if n_points <= 0:
+        return
+    us_per_point = elapsed_s / n_points * 1e6
+    with _TELEMETRY_LOCK:
+        entry = _TELEMETRY.get(signature)
+        if entry is None:
+            entry = {"backend": backend, "workload": workload,
+                     "by_bucket": {}}
+            _TELEMETRY[signature] = entry
+            while len(_TELEMETRY) > _TELEMETRY_MAXKEYS:
+                _TELEMETRY.popitem(last=False)
+        else:
+            _TELEMETRY.move_to_end(signature)
+        samples = entry["by_bucket"].setdefault(
+            int(bucket), collections.deque(maxlen=_TELEMETRY_MAXSAMPLES))
+        samples.append(float(us_per_point))
+
+
+def execution_stats() -> list[dict]:
+    """Summarize recorded executions: one dict per plan signature with
+    per-bucket (count, mean/min us/point).  Plain data, safe to json-dump
+    after stringifying keys."""
+    out = []
+    with _TELEMETRY_LOCK:
+        items = [(k, {"backend": v["backend"], "workload": v["workload"],
+                      "by_bucket": {b: list(s)
+                                    for b, s in v["by_bucket"].items()}})
+                 for k, v in _TELEMETRY.items()]
+    for sig, entry in items:
+        buckets = {}
+        for b, samples in sorted(entry["by_bucket"].items()):
+            buckets[b] = {
+                "count": len(samples),
+                "us_per_point_mean": sum(samples) / len(samples),
+                "us_per_point_min": min(samples),
+            }
+        out.append({"signature": sig, "backend": entry["backend"],
+                    "workload": entry["workload"], "by_bucket": buckets})
+    return out
 
 
 def resolve_backend(plan, workload: str) -> BackendSpec:

@@ -1,0 +1,429 @@
+"""CurvatureService: async request coalescing over CurvaturePlan executables.
+
+The paper's headline result is 0.5M *independent* HVPs evaluated as one
+batched program (§6-7); in a serving setting those arrive as many small
+requests from many clients, not one pre-built (m, n) array.  This module is
+the batching layer between the two: ``plan.submit(a, v)`` returns a future,
+requests accumulate in a bounded per-plan queue, and a dispatcher thread
+coalesces them into padded power-of-two micro-batches executed via the
+plan's ordinary cached ``batched_hvp`` / ``batched_hessian`` executables.
+
+Why power-of-two buckets: jit re-specializes per batch shape, so serving
+raw request counts would compile one program per observed count.  Padding
+to the next power of two (capped at ``max_batch``) bounds the shape set to
+log2(max_batch) entries per plan signature -- the executable cache stays
+small and warm.  Padding replicates the last row (see
+``plan.pad_rows``) and padded outputs are sliced off before futures
+resolve.
+
+The two knobs are the classic latency/throughput dial:
+
+  max_batch   : dispatch immediately once this many requests are pending
+                (full bucket, no padding waste).
+  max_wait_us : a partially filled queue is flushed once its OLDEST request
+                has waited this long.  0 flushes on every dispatcher pass
+                (lowest latency); larger values trade tail latency for
+                fuller buckets.
+
+Every executed bucket is reported to ``registry.record_execution`` --
+measured us/point per (plan signature, bucket) -- the history a future
+``backend="auto"`` can learn from.
+
+Usage::
+
+    from repro import engine
+
+    p = engine.plan(f, n, csize="auto", symmetric=False)
+    futs = [p.submit(a, v) for a, v in requests]     # process-default service
+    results = [f.result() for f in futs]             # == [p.hvp(a, v) ...]
+
+    # explicit service with custom knobs (and deterministic tests):
+    with engine.CurvatureService(max_batch=64, max_wait_us=500) as svc:
+        fut = svc.submit(p, a, v)
+
+Determinism for tests: construct with ``start=False`` and drive the
+dispatcher by hand with ``poll()`` / ``flush()``; pass ``clock=`` a fake
+monotonic clock to test the wait-budget logic without sleeping.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import registry
+from .plan import CurvaturePlan, bucket_size, pad_rows
+
+__all__ = [
+    "CurvatureService", "ServiceClosed", "ServiceQueueFull",
+    "get_service", "configure_service", "shutdown_service",
+    "DEFAULT_MAX_BATCH", "DEFAULT_MAX_WAIT_US", "DEFAULT_MAX_QUEUE",
+]
+
+DEFAULT_MAX_BATCH = 256
+DEFAULT_MAX_WAIT_US = 200.0
+DEFAULT_MAX_QUEUE = 4096
+
+
+class ServiceClosed(RuntimeError):
+    """Submit after shutdown, or pending work cancelled by shutdown."""
+
+
+class ServiceQueueFull(RuntimeError):
+    """Bounded queue is full and the caller declined to wait."""
+
+
+@dataclass
+class _Request:
+    a: Any
+    v: Any                       # None => hessian workload
+    future: Future
+    t_submit: float              # service clock, for the wait budget
+
+
+@dataclass
+class _PlanQueue:
+    """Pending requests sharing one (plan signature, workload)."""
+    plan: CurvaturePlan
+    workload: str                # "batched_hvp" | "batched_hessian"
+    backend: str
+    key: tuple                   # the plan's executable cache key (also the
+                                 # _queues index and the telemetry key)
+    requests: collections.deque = field(default_factory=collections.deque)
+
+
+class CurvatureService:
+    """Coalesces single-point curvature requests into micro-batches.
+
+    One dispatcher thread serves any number of plans: requests are keyed on
+    the plan's executable cache signature, so two plan objects with the same
+    static signature share a queue (and the same compiled program).  All
+    public methods are thread-safe.
+    """
+
+    def __init__(self, *, max_batch: int = DEFAULT_MAX_BATCH,
+                 max_wait_us: float = DEFAULT_MAX_WAIT_US,
+                 max_queue: int = DEFAULT_MAX_QUEUE,
+                 clock: Callable[[], float] = time.monotonic,
+                 start: bool = True):
+        if max_batch < 1:
+            raise ValueError(f"max_batch={max_batch} must be >= 1")
+        if max_wait_us < 0:
+            raise ValueError(f"max_wait_us={max_wait_us} must be >= 0")
+        if max_queue < 1:
+            raise ValueError(f"max_queue={max_queue} must be >= 1")
+        self.max_batch = int(max_batch)
+        self.max_wait_us = float(max_wait_us)
+        self.max_queue = int(max_queue)
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._space = threading.Condition(self._lock)   # queue-full waiters
+        self._wake = threading.Event()                  # dispatcher nudge
+        self._queues: dict = collections.OrderedDict()  # key -> _PlanQueue
+        # (id(plan), workload) -> (backend, key); holds a strong plan ref in
+        # the value so the id stays valid.  Saves a registry resolve + plan
+        # hash per submit on the hot path.
+        self._routes: dict = {}
+        self._pending = 0
+        self._closed = False
+        self._stats = {"submitted": 0, "dispatched": 0, "batches": 0,
+                       "padded_rows": 0,
+                       "buckets": collections.Counter()}
+        self._thread: Optional[threading.Thread] = None
+        if start:
+            self._thread = threading.Thread(
+                target=self._dispatch_loop, name="curvature-service",
+                daemon=True)
+            self._thread.start()
+
+    # -- client side --------------------------------------------------------
+
+    def submit(self, plan: CurvaturePlan, a, v=None, *, block: bool = True,
+               timeout: Optional[float] = None) -> Future:
+        """Enqueue one request; returns a Future of the single-point result.
+
+        ``v`` given  -> future resolves to H_f(a) @ v  (shape (n,))
+        ``v`` None   -> future resolves to H_f(a)      (shape (n, n))
+
+        Results are host numpy arrays (the serving payload); inputs are
+        host-marshalled too, so numpy inputs are the fast path.
+
+        Backpressure: when ``max_queue`` requests are already pending the
+        call blocks until space frees (``timeout`` seconds at most), or
+        raises ``ServiceQueueFull`` immediately when ``block=False``.
+        """
+        if plan.n is None:
+            raise ValueError(
+                "CurvatureService coalesces flat-vector plans only; pytree "
+                "plans execute directly via plan.hvp(params, v)")
+        workload = "batched_hvp" if v is not None else "batched_hessian"
+        route = self._routes.get((id(plan), workload))
+        if route is None:
+            backend = plan.backend_for(workload)
+            key = plan.cache_key(workload, backend)
+            if len(self._routes) > 4 * max(len(self._queues), 64):
+                self._routes.clear()     # id-reuse guard, keeps dict small
+            route = self._routes[(id(plan), workload)] = (plan, backend, key)
+        _plan_ref, backend, key = route
+        # marshal on the HOST: requests are stacked with np.stack and shipped
+        # to the device as ONE array per bucket -- stacking k device-resident
+        # rows instead costs one dispatch per row (~100x slower on CPU jax)
+        a = np.asarray(a)
+        if a.shape != (plan.n,):
+            raise ValueError(
+                f"submit expects a single point of shape ({plan.n},), got "
+                f"{a.shape}; batched arrays go through plan.{workload}")
+        if v is not None:
+            v = np.asarray(v)
+            if v.shape != (plan.n,):
+                raise ValueError(
+                    f"submit expects v of shape ({plan.n},), got {v.shape}")
+        fut: Future = Future()
+        with self._space:
+            if self._closed:
+                raise ServiceClosed("CurvatureService is shut down")
+            if self._pending >= self.max_queue:
+                if not block:
+                    raise ServiceQueueFull(
+                        f"{self._pending} requests pending "
+                        f"(max_queue={self.max_queue})")
+                ok = self._space.wait_for(
+                    lambda: self._closed or self._pending < self.max_queue,
+                    timeout)
+                if self._closed:
+                    raise ServiceClosed("CurvatureService is shut down")
+                if not ok:
+                    raise ServiceQueueFull(
+                        f"queue still full after {timeout}s "
+                        f"(max_queue={self.max_queue})")
+            q = self._queues.get(key)
+            if q is None:
+                q = _PlanQueue(plan=plan, workload=workload, backend=backend,
+                               key=key)
+                self._queues[key] = q
+            q.requests.append(_Request(a, v, fut, self._clock()))
+            self._pending += 1
+            self._stats["submitted"] += 1
+            # wake the dispatcher only on the transitions it cares about: a
+            # previously-empty service (it may be in an unbounded wait) or a
+            # queue reaching a full bucket (dispatch now, not at deadline).
+            # Anything in between is already covered by its deadline timer,
+            # and an Event.set per submit costs a lock on the hot path.
+            nudge = self._pending == 1 or len(q.requests) >= self.max_batch
+        if nudge:
+            self._wake.set()
+        return fut
+
+    # -- dispatcher side ----------------------------------------------------
+
+    def poll(self, now: Optional[float] = None) -> int:
+        """One dispatch pass; returns the number of requests dispatched.
+
+        Dispatches every queue that has either (a) a full ``max_batch``
+        bucket pending, or (b) an oldest request older than the
+        ``max_wait_us`` budget at time ``now`` (service clock).  Public so
+        tests (and ``start=False`` embeddings) can drive the service
+        deterministically."""
+        if now is None:
+            now = self._clock()
+        dispatched = 0
+        while True:
+            batch = self._take_ready_batch(now)
+            if batch is None:
+                return dispatched
+            q, reqs = batch
+            self._execute(q, reqs)
+            dispatched += len(reqs)
+
+    def flush(self) -> int:
+        """Dispatch everything pending regardless of age; returns count."""
+        dispatched = 0
+        while True:
+            batch = self._take_ready_batch(now=None, force=True)
+            if batch is None:
+                return dispatched
+            q, reqs = batch
+            self._execute(q, reqs)
+            dispatched += len(reqs)
+
+    def _take_ready_batch(self, now, force: bool = False):
+        """Pop up to max_batch requests from the first ready queue.
+
+        The served queue rotates to the back (round-robin), so one
+        continuously-full plan queue cannot starve the others past their
+        wait budget."""
+        with self._space:
+            for key, q in list(self._queues.items()):
+                if not q.requests:
+                    continue
+                full = len(q.requests) >= self.max_batch
+                if not (force or full):
+                    age_us = (now - q.requests[0].t_submit) * 1e6
+                    if age_us < self.max_wait_us:
+                        continue
+                k = min(len(q.requests), self.max_batch)
+                reqs = [q.requests.popleft() for _ in range(k)]
+                self._pending -= k
+                self._queues.move_to_end(key)
+                self._space.notify_all()
+                return q, reqs
+            return None
+
+    def _execute(self, q: _PlanQueue, reqs) -> None:
+        """Run one coalesced bucket and resolve its futures."""
+        live = [r for r in reqs if r.future.set_running_or_notify_cancel()]
+        if not live:
+            return
+        k = len(live)
+        bucket = bucket_size(k, self.max_batch)
+        try:
+            # marshal BOTH operands before t0: telemetry must charge the
+            # same work to hvp and hessian buckets (execution + readback,
+            # not host-to-device marshalling)
+            A = jnp.asarray(pad_rows(np.stack([r.a for r in live]), bucket))
+            V = None if q.workload != "batched_hvp" else jnp.asarray(
+                pad_rows(np.stack([r.v for r in live]), bucket))
+            t0 = time.perf_counter()
+            if V is not None:
+                out = q.plan.batched_hvp(A, V)
+            else:
+                out = q.plan.batched_hessian(A)
+            out = np.asarray(jax.block_until_ready(out))
+            elapsed = time.perf_counter() - t0
+        except Exception as e:
+            for r in live:
+                r.future.set_exception(e)
+            return
+        registry.record_execution(q.key, q.backend, q.workload,
+                                  bucket=bucket, n_points=k,
+                                  elapsed_s=elapsed)
+        with self._lock:
+            self._stats["dispatched"] += k
+            self._stats["batches"] += 1
+            self._stats["padded_rows"] += bucket - k
+            self._stats["buckets"][bucket] += 1
+        for i, r in enumerate(live):
+            # copy: out[i] would be a view pinning the whole padded bucket
+            # (max_batch rows) for as long as the client keeps its result
+            r.future.set_result(out[i].copy())
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            self._wake.clear()
+            if self._closed:
+                self.flush()        # drain: no submits can arrive anymore
+                return
+            if self.poll() > 0:
+                continue
+            with self._lock:
+                if self._closed:
+                    continue        # loop back to the drain branch
+                delay = self._next_deadline_delay()
+            # wait for a submit nudge or the oldest request's deadline
+            self._wake.wait(delay)
+
+    def _next_deadline_delay(self) -> Optional[float]:
+        """Seconds until the oldest pending request exceeds its wait budget
+        (None = sleep until nudged).  Caller holds the lock."""
+        oldest = None
+        for q in self._queues.values():
+            if q.requests:
+                t = q.requests[0].t_submit
+                oldest = t if oldest is None else min(oldest, t)
+        if oldest is None:
+            return None
+        remaining = self.max_wait_us * 1e-6 - (self._clock() - oldest)
+        return max(remaining, 0.0) + 1e-4   # small slack past the deadline
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Counters snapshot: submitted/dispatched/batches/padded_rows plus
+        a {bucket: batches} histogram and the current queue depth."""
+        with self._lock:
+            s = dict(self._stats)
+            s["buckets"] = dict(self._stats["buckets"])
+            s["pending"] = self._pending
+            return s
+
+    def shutdown(self, wait: bool = True) -> None:
+        """Stop accepting submits.  ``wait=True`` drains pending requests
+        (dispatching them) and joins the dispatcher; ``wait=False`` fails
+        pending futures with ServiceClosed."""
+        with self._space:
+            if self._closed and self._thread is None:
+                return
+            self._closed = True
+            if not wait:
+                for q in self._queues.values():
+                    while q.requests:
+                        r = q.requests.popleft()
+                        self._pending -= 1
+                        if r.future.set_running_or_notify_cancel():
+                            r.future.set_exception(
+                                ServiceClosed("service shut down"))
+            self._space.notify_all()
+        self._wake.set()
+        t, self._thread = self._thread, None
+        if t is not None:
+            if wait:
+                t.join()
+            return
+        if wait:
+            self.flush()            # start=False services drain inline
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown(wait=exc[0] is None)
+
+
+# ---------------------------------------------------------------------------
+# process-default service (what plan.submit uses)
+# ---------------------------------------------------------------------------
+
+_DEFAULT: Optional[CurvatureService] = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def get_service() -> CurvatureService:
+    """The process-default CurvatureService, created on first use."""
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        if _DEFAULT is None:
+            _DEFAULT = CurvatureService()
+        return _DEFAULT
+
+
+def configure_service(**kwargs) -> CurvatureService:
+    """Replace the process-default service (draining the old one).
+
+    Accepts the CurvatureService constructor knobs: ``max_batch``,
+    ``max_wait_us``, ``max_queue``, ``clock``, ``start``.  The new service
+    is installed atomically BEFORE the old one drains, so a concurrent
+    ``get_service()`` can never create (and leak) a third one."""
+    global _DEFAULT
+    svc = CurvatureService(**kwargs)
+    with _DEFAULT_LOCK:
+        old, _DEFAULT = _DEFAULT, svc
+    if old is not None:
+        old.shutdown(wait=True)
+    return svc
+
+
+def shutdown_service(wait: bool = True) -> None:
+    """Shut down the process-default service (if one was created)."""
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        svc, _DEFAULT = _DEFAULT, None
+    if svc is not None:
+        svc.shutdown(wait=wait)

@@ -1,0 +1,340 @@
+"""CurvatureService acceptance: coalesced results must be IDENTICAL to the
+direct plan executables under interleaved submits, padding must be correct
+at non-bucket sizes, the wait budget must flush deterministically (fake
+clock), and exceptions must propagate into futures -- the serving layer may
+never silently drop or corrupt a request."""
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import ref, testfns
+from repro.engine.service import (CurvatureService, ServiceClosed,
+                                  ServiceQueueFull)
+
+N = 8
+
+
+def _data(n, m, seed=0):
+    rng = np.random.RandomState(seed)
+    A = np.asarray(rng.uniform(-2, 2, (m, n)), np.float32)
+    V = np.asarray(rng.randn(m, n), np.float32)
+    return A, V
+
+
+def _plan(fname="rosenbrock", csize=2, n=N):
+    f = testfns.rosenbrock if fname == "rosenbrock" else testfns.ackley
+    return engine.plan(f, n, csize=csize, symmetric=False)
+
+
+# ---------------------------------------------------------------------------
+# correctness: coalesced == direct
+# ---------------------------------------------------------------------------
+
+def test_interleaved_submits_match_direct_batched_hvp():
+    """Requests for two different plans interleaved through one service must
+    each match the direct batched_hvp of their own plan."""
+    p_ros, p_ack = _plan("rosenbrock"), _plan("ackley")
+    m = 13                                    # non-bucket count on purpose
+    A, V = _data(N, m, seed=1)
+    with CurvatureService(max_batch=8, max_wait_us=500) as svc:
+        futs = []
+        for i in range(m):                    # strict interleaving
+            futs.append(("ros", i, svc.submit(p_ros, A[i], V[i])))
+            futs.append(("ack", i, svc.submit(p_ack, A[i], V[i])))
+        got = {(tag, i): fut.result(timeout=60) for tag, i, fut in futs}
+    want_ros = p_ros.batched_hvp(jnp.asarray(A), jnp.asarray(V))
+    want_ack = p_ack.batched_hvp(jnp.asarray(A), jnp.asarray(V))
+    for i in range(m):
+        np.testing.assert_allclose(got[("ros", i)], np.asarray(want_ros[i]),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(got[("ack", i)], np.asarray(want_ack[i]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_concurrent_client_threads_match_direct():
+    p = _plan()
+    m, clients = 24, 4
+    A, V = _data(N, m, seed=2)
+    results = [None] * m
+    with CurvatureService(max_batch=8, max_wait_us=200) as svc:
+        def client(cid):
+            futs = [(i, svc.submit(p, A[i], V[i]))
+                    for i in range(cid, m, clients)]
+            for i, fut in futs:
+                results[i] = fut.result(timeout=60)
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    want = p.batched_hvp(jnp.asarray(A), jnp.asarray(V))
+    for i in range(m):
+        np.testing.assert_allclose(results[i], np.asarray(want[i]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_hessian_requests_coalesce():
+    """v=None submits coalesce through batched_hessian."""
+    p = _plan(csize=2)
+    A, _ = _data(N, 3, seed=3)
+    svc = CurvatureService(start=False, max_batch=8)
+    futs = [svc.submit(p, A[i]) for i in range(3)]
+    assert svc.flush() == 3
+    want = p.batched_hessian(jnp.asarray(A))
+    for i, fut in enumerate(futs):
+        got = fut.result(timeout=0)
+        assert got.shape == (N, N)
+        np.testing.assert_allclose(got, np.asarray(want[i]),
+                                   rtol=1e-5, atol=1e-5)
+    svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# padding / bucketing
+# ---------------------------------------------------------------------------
+
+def test_bucket_size_and_pad_rows_helpers():
+    assert engine.bucket_size(1) == 1
+    assert engine.bucket_size(5) == 8
+    assert engine.bucket_size(8) == 8
+    assert engine.bucket_size(9, max_batch=16) == 16
+    with pytest.raises(ValueError):
+        engine.bucket_size(0)
+    with pytest.raises(ValueError):
+        engine.bucket_size(17, max_batch=16)
+    X = np.arange(6, dtype=np.float32).reshape(3, 2)
+    P = engine.pad_rows(X, 8)
+    assert isinstance(P, np.ndarray) and P.shape == (8, 2)
+    np.testing.assert_array_equal(P[:3], X)
+    for r in range(3, 8):                    # edge replication, not zeros
+        np.testing.assert_array_equal(P[r], X[-1])
+    assert engine.pad_rows(X, 3) is X
+    with pytest.raises(ValueError):
+        engine.pad_rows(X, 2)
+
+
+@pytest.mark.parametrize("k,expected_bucket", [(1, 1), (3, 4), (5, 8),
+                                               (7, 8)])
+def test_padding_correct_at_non_bucket_sizes(k, expected_bucket):
+    """k requests pad to the next power-of-two bucket; every real result is
+    exact and the padded rows never leak out."""
+    p = _plan(csize=2)
+    A, V = _data(N, k, seed=10 + k)
+    svc = CurvatureService(start=False, max_batch=8)
+    futs = [svc.submit(p, A[i], V[i]) for i in range(k)]
+    assert svc.poll(now=1e9) == k            # wait budget exceeded: flush
+    assert svc.stats()["buckets"] == {expected_bucket: 1}
+    assert svc.stats()["padded_rows"] == expected_bucket - k
+    want = p.batched_hvp(jnp.asarray(A), jnp.asarray(V))
+    for i, fut in enumerate(futs):
+        np.testing.assert_allclose(fut.result(timeout=0),
+                                   np.asarray(want[i]),
+                                   rtol=1e-5, atol=1e-5)
+    svc.shutdown()
+
+
+def test_overfull_queue_splits_into_max_batch_buckets():
+    p = _plan()
+    A, V = _data(N, 10, seed=4)
+    svc = CurvatureService(start=False, max_batch=4, max_wait_us=1e9)
+    futs = [svc.submit(p, A[i], V[i]) for i in range(10)]
+    # two full buckets dispatch even though the wait budget is infinite...
+    assert svc.poll(now=0.0) == 8
+    assert svc.stats()["buckets"] == {4: 2}
+    # ...the ragged 2-request tail waits for its budget, then pads to 2
+    assert svc.poll(now=0.0) == 0
+    assert svc.poll(now=1e9) == 2
+    assert svc.stats()["buckets"] == {4: 2, 2: 1}
+    want = p.batched_hvp(jnp.asarray(A), jnp.asarray(V))
+    for i, fut in enumerate(futs):
+        np.testing.assert_allclose(fut.result(timeout=0),
+                                   np.asarray(want[i]),
+                                   rtol=1e-5, atol=1e-5)
+    svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# wait budget (fake clock: no sleeping, no flakes)
+# ---------------------------------------------------------------------------
+
+def test_max_wait_us_flush_with_fake_clock():
+    now = [0.0]
+    svc = CurvatureService(start=False, clock=lambda: now[0],
+                           max_batch=64, max_wait_us=500.0)
+    p = _plan()
+    A, V = _data(N, 2, seed=5)
+    f0 = svc.submit(p, A[0], V[0])
+    now[0] = 300e-6
+    f1 = svc.submit(p, A[1], V[1])
+    assert svc.poll() == 0                   # oldest is 300us old: under budget
+    assert not f0.done() and not f1.done()
+    now[0] = 499e-6
+    assert svc.poll() == 0                   # 499us: still under
+    now[0] = 501e-6
+    assert svc.poll() == 2                   # oldest crossed 500us: flush ALL
+    assert f0.done() and f1.done()
+    want = p.batched_hvp(jnp.asarray(A), jnp.asarray(V))
+    np.testing.assert_allclose(f0.result(timeout=0), np.asarray(want[0]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(f1.result(timeout=0), np.asarray(want[1]),
+                               rtol=1e-5, atol=1e-5)
+    svc.shutdown()
+
+
+def test_full_bucket_dispatches_before_wait_budget():
+    now = [0.0]
+    svc = CurvatureService(start=False, clock=lambda: now[0],
+                           max_batch=2, max_wait_us=1e9)
+    p = _plan()
+    A, V = _data(N, 2, seed=6)
+    svc.submit(p, A[0], V[0])
+    assert svc.poll() == 0
+    svc.submit(p, A[1], V[1])
+    assert svc.poll() == 2                   # bucket full: no waiting
+    svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# failure paths
+# ---------------------------------------------------------------------------
+
+def test_exception_propagates_into_every_future():
+    boom = RuntimeError("deliberate trace-time failure")
+
+    def bad(x):
+        raise boom
+
+    p = engine.plan(bad, N, csize=1, backend="vmap_l2", symmetric=False)
+    A, V = _data(N, 3, seed=7)
+    svc = CurvatureService(start=False, max_batch=8)
+    futs = [svc.submit(p, A[i], V[i]) for i in range(3)]
+    assert svc.flush() == 3                  # dispatch consumed the batch
+    for fut in futs:
+        with pytest.raises(RuntimeError, match="deliberate"):
+            fut.result(timeout=0)
+    svc.shutdown()
+
+
+def test_bad_shapes_and_pytree_plans_rejected_at_submit():
+    p = _plan()
+    svc = CurvatureService(start=False)
+    A, V = _data(N, 1, seed=8)
+    with pytest.raises(ValueError):
+        svc.submit(p, np.zeros((N + 1,), np.float32), V[0])
+    with pytest.raises(ValueError):
+        svc.submit(p, A[0], np.zeros((2, N), np.float32))
+    p_tree = engine.plan(testfns.rosenbrock, None, backend="pytree_fwdrev")
+    with pytest.raises(ValueError):
+        svc.submit(p_tree, A[0], V[0])
+    svc.shutdown()
+
+
+def test_bounded_queue_backpressure_and_close():
+    p = _plan()
+    A, V = _data(N, 3, seed=9)
+    svc = CurvatureService(start=False, max_queue=2)
+    svc.submit(p, A[0], V[0])
+    svc.submit(p, A[1], V[1])
+    with pytest.raises(ServiceQueueFull):
+        svc.submit(p, A[2], V[2], block=False)
+    with pytest.raises(ServiceQueueFull):
+        svc.submit(p, A[2], V[2], timeout=0.01)
+    svc.flush()                              # frees the queue
+    fut = svc.submit(p, A[2], V[2], block=False)
+    svc.shutdown(wait=True)                  # drains pending inline
+    assert fut.done()
+    with pytest.raises(ServiceClosed):
+        svc.submit(p, A[0], V[0])
+
+
+def test_shutdown_no_wait_fails_pending_futures():
+    p = _plan()
+    A, V = _data(N, 2, seed=11)
+    svc = CurvatureService(start=False)
+    futs = [svc.submit(p, A[i], V[i]) for i in range(2)]
+    svc.shutdown(wait=False)
+    for fut in futs:
+        with pytest.raises(ServiceClosed):
+            fut.result(timeout=0)
+
+
+# ---------------------------------------------------------------------------
+# plan integration + telemetry + hints
+# ---------------------------------------------------------------------------
+
+def test_plan_submit_routes_through_default_service():
+    p = _plan()
+    A, V = _data(N, 1, seed=12)
+    fut = p.submit(A[0], V[0])
+    want = np.asarray(ref.hvp_fwdrev(p.f, jnp.asarray(A[0]),
+                                     jnp.asarray(V[0])))
+    np.testing.assert_allclose(fut.result(timeout=60), want,
+                               rtol=1e-4, atol=1e-4)
+    assert p.service() is engine.get_service()
+    engine.shutdown_service()
+
+
+def test_plans_with_same_signature_share_a_queue():
+    """Two equal-signature plan objects coalesce into ONE bucket."""
+    p1, p2 = _plan(), _plan()
+    assert p1 is not p2
+    A, V = _data(N, 2, seed=13)
+    svc = CurvatureService(start=False, max_batch=8)
+    f1 = svc.submit(p1, A[0], V[0])
+    f2 = svc.submit(p2, A[1], V[1])
+    assert svc.poll(now=1e9) == 2
+    assert svc.stats()["batches"] == 1       # one coalesced micro-batch
+    assert f1.done() and f2.done()
+    svc.shutdown()
+
+
+def test_round_robin_prevents_queue_starvation():
+    """A continuously-full queue must not starve other plans: after serving
+    one bucket from a queue, the dispatcher rotates it to the back."""
+    p_a, p_b = _plan("rosenbrock"), _plan("ackley")
+    A, V = _data(N, 6, seed=15)
+    svc = CurvatureService(start=False, max_batch=2, max_wait_us=1e9)
+    for i in range(4):                       # two full buckets for plan A
+        svc.submit(p_a, A[i], V[i])
+    fb = [svc.submit(p_b, A[4 + i], V[4 + i]) for i in range(2)]
+    q1, reqs1 = svc._take_ready_batch(now=0.0)
+    q2, reqs2 = svc._take_ready_batch(now=0.0)
+    assert q1.plan.f is p_a.f and len(reqs1) == 2
+    assert q2.plan.f is p_b.f and len(reqs2) == 2   # B served between A's buckets
+    svc._execute(q1, reqs1)
+    svc._execute(q2, reqs2)
+    assert all(f.done() for f in fb)
+    svc.flush()
+    svc.shutdown()
+
+
+def test_execution_telemetry_recorded_per_bucket():
+    engine.clear_telemetry()
+    p = _plan()
+    A, V = _data(N, 5, seed=14)
+    svc = CurvatureService(start=False, max_batch=8)
+    for i in range(5):
+        svc.submit(p, A[i], V[i])
+    svc.flush()
+    svc.shutdown()
+    stats = engine.execution_stats()
+    assert len(stats) == 1
+    rec = stats[0]
+    assert rec["workload"] == "batched_hvp"
+    assert list(rec["by_bucket"]) == [8]     # 5 requests -> bucket 8
+    b = rec["by_bucket"][8]
+    assert b["count"] == 1 and b["us_per_point_mean"] > 0
+
+
+def test_m_zero_rejected_with_hint_semantics_message():
+    with pytest.raises(ValueError, match="hint"):
+        engine.plan(testfns.rosenbrock, N, m=0)
+    with pytest.raises(ValueError):
+        engine.plan(testfns.rosenbrock, N, m=-3)
+    # m=None remains the "no hint" spelling
+    assert engine.plan(testfns.rosenbrock, N).m is None

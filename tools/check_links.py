@@ -1,0 +1,135 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo markdown links (CI docs job).
+
+Checks every ``[text](target)`` in the given markdown files/directories:
+
+- relative file targets must exist (resolved against the linking file);
+- ``#fragment`` anchors into a markdown file must match one of its heading
+  slugs (GitHub slugger: lowercase, punctuation stripped, spaces -> dashes);
+- external links (http/https/mailto) are NOT fetched -- this is an
+  intra-repo checker, CI must not depend on the network.
+
+Usage:
+    python tools/check_links.py README.md ROADMAP.md docs
+Exit status 1 if any link is broken, listing every failure.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) -- target up to the first unescaped ')'; tolerate one
+# level of parens in the target (rare in this repo, cheap to allow)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^()\s]+(?:\([^()]*\)[^()\s]*)?)\)")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slugger: strip markup, lowercase, keep word chars,
+    spaces and dashes; spaces -> dashes."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading)          # inline code
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # links -> text
+    text = re.sub(r"[*_~]", "", text)                     # emphasis
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_slugs(md_path: Path) -> set:
+    """All anchor slugs a markdown file exposes (with -1/-2 dup suffixes)."""
+    slugs: set = set()
+    counts: dict = {}
+    in_fence = False
+    for line in md_path.read_text(encoding="utf-8").splitlines():
+        if CODE_FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        base = github_slug(m.group(2))
+        k = counts.get(base, 0)
+        counts[base] = k + 1
+        slugs.add(base if k == 0 else f"{base}-{k}")
+    return slugs
+
+
+def iter_links(md_path: Path):
+    """Yield (lineno, target) for every markdown link outside code fences."""
+    in_fence = False
+    for lineno, line in enumerate(
+            md_path.read_text(encoding="utf-8").splitlines(), start=1):
+        if CODE_FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        # strip inline code spans so `[x](y)` examples aren't checked
+        stripped = re.sub(r"`[^`]*`", "", line)
+        for m in LINK_RE.finditer(stripped):
+            yield lineno, m.group(1)
+
+
+def _rel(md_path: Path, repo_root: Path) -> str:
+    try:
+        return str(md_path.relative_to(repo_root))
+    except ValueError:          # file outside the repo root (absolute arg)
+        return str(md_path)
+
+
+def check_file(md_path: Path, repo_root: Path) -> list:
+    errors = []
+    for lineno, target in iter_links(md_path):
+        if target.startswith(EXTERNAL):
+            continue
+        path_part, _, fragment = target.partition("#")
+        if path_part:
+            resolved = (md_path.parent / path_part).resolve()
+            if not resolved.exists():
+                errors.append(f"{_rel(md_path, repo_root)}:{lineno}: "
+                              f"broken link target {target!r}")
+                continue
+        else:
+            resolved = md_path.resolve()
+        if fragment and resolved.suffix == ".md" and resolved.is_file():
+            if github_slug(fragment) not in heading_slugs(resolved):
+                errors.append(f"{_rel(md_path, repo_root)}:{lineno}: "
+                              f"missing anchor {target!r}")
+    return errors
+
+
+def main(argv) -> int:
+    repo_root = Path(__file__).resolve().parent.parent
+    targets = argv or ["README.md", "ROADMAP.md", "docs"]
+    md_files: list = []
+    for t in targets:
+        p = (repo_root / t) if not Path(t).is_absolute() else Path(t)
+        if p.is_dir():
+            md_files.extend(sorted(p.rglob("*.md")))
+        elif p.exists():
+            md_files.append(p)
+        else:
+            print(f"check_links: no such file or directory: {t}",
+                  file=sys.stderr)
+            return 2
+    errors = []
+    for md in md_files:
+        errors.extend(check_file(md, repo_root))
+    if errors:
+        print(f"check_links: {len(errors)} broken link(s):", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print(f"check_links: {len(md_files)} files OK "
+          f"({', '.join(_rel(m, repo_root) for m in md_files)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
