@@ -30,10 +30,16 @@ from repro.core import testfns
 
 def run_baseline(plan, A, V):
     """One-request-at-a-time: what serving looks like without coalescing."""
-    jax.block_until_ready(plan.hvp(A[0], V[0]))          # compile + warmup
+    try:
+        plan.backend_for("hvp")
+        one = lambda i: plan.hvp(A[i], V[i])
+    except ValueError:
+        # batched-only backends (pallas serves just batched_hvp) still get
+        # a sequential baseline: one-row batches, one request at a time
+        one = lambda i: plan.batched_hvp(A[i:i + 1], V[i:i + 1])[0]
+    jax.block_until_ready(one(0))                        # compile + warmup
     t0 = time.perf_counter()
-    outs = [jax.block_until_ready(plan.hvp(A[i], V[i]))
-            for i in range(A.shape[0])]
+    outs = [jax.block_until_ready(one(i)) for i in range(A.shape[0])]
     return outs, time.perf_counter() - t0
 
 

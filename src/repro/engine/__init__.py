@@ -16,12 +16,16 @@ engine makes the scheduling decision explicit, cached, and tunable:
 
 Planning decisions:
   csize   : "auto" -> paper §5 scalar-op model argmin;
-            "autotune" -> one-shot microbenchmark; or an explicit int.
-  backend : "auto" -> registry pick (mesh => sharded, else the L2 vmap
-            schedule; Pallas auto-wins on TPU); or any registered name --
-            reference | vmap_l0 | vmap_l1 | vmap_l2 | pallas | sharded |
-            pytree_fwdrev (also serves the Hutchinson "diag" workload) |
-            pytree_fwd ("quadform").
+            "autotune" -> joint (csize, backend, blk_m) microbenchmark,
+            memoized in-process and persisted to disk (a warm store
+            resolves with zero timed probes); or an explicit int.
+  backend : "auto" -> learned history first (the joint tuner's persisted
+            winner, then execution telemetry), then the registry pick
+            (mesh => sharded, else the L2 vmap schedule; Pallas auto-wins
+            on TPU); or any registered name -- reference | vmap_l0 |
+            vmap_l1 | vmap_l2 | pallas | sharded | pytree_fwdrev (also
+            serves the Hutchinson "diag" workload) | pytree_fwd
+            ("quadform").
 
 Executables are cached process-wide on (f, n, csize, symmetric, backend,
 mesh, workload, options): repeated plans with the same static signature
@@ -45,9 +49,12 @@ from .plan import (CurvaturePlan, plan, clear_cache, trace_count,
 from .registry import (BackendSpec, register_backend, get_backend,
                        list_backends, resolve_backend, WORKLOADS,
                        record_execution, execution_stats, clear_telemetry)
-from .opmodel import (model_csize, csize_candidates, mults_chunk_hess,
+from .opmodel import (model_csize, csize_candidates,
+                      pruned_csize_candidates, mults_chunk_hess,
                       mults_schunk_hess, count_jaxpr_ops, LANE_WIDTH)
-from .autotune import autotune_csize, clear_autotune_cache
+from .autotune import (autotune, autotune_csize, clear_autotune_cache,
+                       TunedConfig, function_fingerprint, lookup_tuned,
+                       probe_count, store_path, load_store, save_store)
 from .service import (CurvatureService, ServiceClosed, ServiceQueueFull,
                       get_service, configure_service, shutdown_service)
 
@@ -57,9 +64,12 @@ __all__ = [
     "BackendSpec", "register_backend", "get_backend", "list_backends",
     "resolve_backend", "WORKLOADS",
     "record_execution", "execution_stats", "clear_telemetry",
-    "model_csize", "csize_candidates", "mults_chunk_hess",
+    "model_csize", "csize_candidates", "pruned_csize_candidates",
+    "mults_chunk_hess",
     "mults_schunk_hess", "count_jaxpr_ops", "LANE_WIDTH",
-    "autotune_csize", "clear_autotune_cache",
+    "autotune", "autotune_csize", "clear_autotune_cache", "TunedConfig",
+    "function_fingerprint", "lookup_tuned", "probe_count",
+    "store_path", "load_store", "save_store",
     "CurvatureService", "ServiceClosed", "ServiceQueueFull",
     "get_service", "configure_service", "shutdown_service",
 ]

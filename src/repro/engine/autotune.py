@@ -1,105 +1,655 @@
-"""One-shot microbenchmark csize autotuner.
+"""Joint (csize, backend, blk_m) microbenchmark autotuner, persisted to disk.
 
 The §5 op model predicts the scalar-work argmin, but on real hardware the
-best csize also depends on lane occupancy and memory traffic.  ``csize=
-"autotune"`` runs each candidate once on a small synthetic probe batch,
-wall-clocks the cached executable, and memoizes the winner per
-``(f, n, symmetric, backend, mesh)`` -- so the tune is paid once per
-process, and every later plan with that signature reuses the answer.
+best configuration also depends on lane occupancy, memory traffic, and the
+schedule itself -- which backend runs the sweep, and (for the Pallas
+kernel) the instance block size.  ``csize="autotune"`` therefore runs a
+JOINT sweep:
+
+  csize    : §5-model-pruned candidate set (``opmodel.pruned_csize_
+             candidates`` -- the model seeds the grid, measurement decides)
+  backend  : every capable non-oracle backend when the plan's backend is
+             "auto" (vmap_l0/l1/l2, pallas on TPU, pytree for single HVPs);
+             just the named one otherwise
+  blk_m    : swept for the pallas backend only (its instance-block dial)
+
+Each candidate is compiled once and wall-clocked best-of-k under a
+deadline budget (``_time_once``); the winner is memoized in-process AND
+persisted to a small JSON store keyed on ``(function fingerprint, n,
+workload, symmetric, probe m, backend, platform)`` -- a serving restart
+with a warm store plans ``csize="autotune"`` without running a single
+timed probe (``probe_count()`` is the CI-checked witness).
+
+Identity: both caches key functions by ``function_fingerprint(f)``
+(qualname + source/closure hash), so the in-memory LRU and the on-disk
+store can never disagree about which ``f`` a record belongs to -- and the
+LRU no longer strong-references per-request closures.
+
+Warm start: ``registry`` execution telemetry (the PR 2 record-half) seeds
+the sweep order, so the measured-best configuration from live traffic is
+probed first and survives even a tight ``deadline_s``.
+
+``backend="auto"`` planning consults the persisted winners at resolve time
+(see ``registry.resolve_backend`` / ``lookup_tuned``) -- the tuner's
+answer, not static priorities, picks the serving backend.
 """
 
 from __future__ import annotations
 
 import collections
+import functools
+import hashlib
+import inspect
+import json
+import os
+import tempfile
+import threading
 import time
+import weakref
+from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import numpy as np
 
 from . import opmodel
 
-__all__ = ["autotune_csize", "clear_autotune_cache"]
+__all__ = [
+    "autotune", "autotune_csize", "clear_autotune_cache", "TunedConfig",
+    "function_fingerprint", "lookup_tuned", "probe_count",
+    "store_path", "load_store", "save_store",
+]
 
-# LRU-bounded for the same reason as the plan executable cache: keys
-# strong-reference f, and per-request closures must not pin forever
+_TUNABLE_WORKLOADS = ("batched_hvp", "hvp", "hessian")
+# backends whose schedule ignores csize: sweeping it would re-measure the
+# same program under different cache keys
+_NON_CHUNKED = frozenset({"reference", "pytree_fwdrev", "pytree_fwd"})
+
+# LRU-bounded like the plan executable cache; keys carry the function
+# FINGERPRINT (not f itself), so per-request closures are never pinned
 AUTOTUNE_CACHE_MAXSIZE = 64
 _AUTOTUNE_CACHE: collections.OrderedDict = collections.OrderedDict()
+# consult table for backend="auto" resolution: store-key -> TunedConfig.
+# _TUNED_VERSION bumps on every mutation so resolve-time consults can be
+# memoized (registry._learned_backend) without re-scanning per dispatch.
+_TUNED: dict = {}
+_TUNED_VERSION = 0
+_LOCK = threading.Lock()
+
+_PROBES_RUN = 0                     # timed executions since process start
+
+
+def tuned_version() -> int:
+    """Monotonic counter of consult-table mutations (memo invalidation)."""
+    return _TUNED_VERSION
+
+
+@dataclass(frozen=True)
+class TunedConfig:
+    """One joint-tune answer: the winning configuration and its measured
+    best-of-k wall time (``time_s``; 0.0 for records restored from disk,
+    whose probe ran in another process)."""
+    csize: int
+    backend: str
+    blk_m: Optional[int]
+    time_s: float
+    source: str                     # "sweep" | "memory" | "disk"
+
+
+def probe_count() -> int:
+    """Timed probe executions (incl. warmups) since process start -- the
+    subprocess persistence test asserts this stays 0 on a warm store."""
+    return _PROBES_RUN
 
 
 def clear_autotune_cache() -> None:
-    _AUTOTUNE_CACHE.clear()
+    """Drop the in-memory memo, the consult table, and the loaded disk
+    snapshot (the store FILE is untouched; the next lookup re-reads it)."""
+    global _DISK, _DISK_PATH, _TUNED_VERSION
+    with _LOCK:
+        _AUTOTUNE_CACHE.clear()
+        _TUNED.clear()
+        _TUNED_VERSION += 1
+        _DISK, _DISK_PATH = None, None
 
 
-def _time_once(fn, reps: int = 3) -> float:
+# ---------------------------------------------------------------------------
+# function identity
+# ---------------------------------------------------------------------------
+
+_FP_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _hash_update(h, obj, depth: int = 0) -> None:
+    """Feed a closure/argument value into the fingerprint hash, stably
+    across processes (no ids, no memory addresses)."""
+    if depth > 4:
+        h.update(b"<deep>")
+        return
+    if obj is None or isinstance(obj, (bool, int, float, complex, str,
+                                       bytes)):
+        h.update(repr(obj).encode())
+    elif isinstance(obj, (np.ndarray, np.generic)) or (
+            type(obj).__module__.startswith(("jax", "jaxlib"))
+            and hasattr(obj, "dtype")):
+        arr = np.asarray(obj)
+        h.update(str(arr.dtype).encode())
+        h.update(repr(arr.shape).encode())
+        h.update(arr.tobytes())
+    elif isinstance(obj, (tuple, list)):
+        h.update(type(obj).__name__.encode())
+        for x in obj:
+            _hash_update(h, x, depth + 1)
+    elif isinstance(obj, dict):
+        for k in sorted(obj, key=repr):
+            _hash_update(h, k, depth + 1)
+            _hash_update(h, obj[k], depth + 1)
+    elif isinstance(obj, functools.partial):
+        _hash_update(h, obj.func, depth + 1)
+        _hash_update(h, obj.args, depth + 1)
+        _hash_update(h, obj.keywords, depth + 1)
+    elif inspect.ismodule(obj):
+        h.update(f"module:{obj.__name__}".encode())
+    elif callable(obj):
+        _hash_callable(h, obj, depth + 1)
+    else:
+        # lossy fallback: type identity only (stable, never an address)
+        h.update(f"<{type(obj).__module__}.{type(obj).__qualname__}>".encode())
+
+
+def _hash_callable(h, f, depth: int = 0) -> None:
+    h.update(getattr(f, "__module__", "") .encode())
+    h.update((getattr(f, "__qualname__", None)
+              or getattr(f, "__name__", type(f).__qualname__)).encode())
+    code = getattr(f, "__code__", None)
+    if code is not None:
+        try:
+            h.update(inspect.getsource(f).encode())
+        except (OSError, TypeError):
+            h.update(code.co_code)
+            h.update(repr(code.co_consts).encode())
+        for cell in (getattr(f, "__closure__", None) or ()):
+            try:
+                _hash_update(h, cell.cell_contents, depth + 1)
+            except ValueError:          # empty cell
+                h.update(b"<empty-cell>")
+        _hash_update(h, getattr(f, "__defaults__", None), depth + 1)
+    elif isinstance(f, functools.partial):
+        _hash_update(h, f, depth)
+    else:
+        # callable instance: hash its type and __call__'s code
+        call = getattr(type(f), "__call__", None)
+        if getattr(call, "__code__", None) is not None:
+            _hash_callable(h, call, depth + 1)
+        _hash_update(h, getattr(f, "__dict__", None), depth + 1)
+
+
+def function_fingerprint(f) -> str:
+    """Stable cross-process identity for a target function: qualname plus a
+    hash of its source (bytecode as fallback) and closure/default values --
+    numpy/jax arrays hashed by content.  Used as the function key of BOTH
+    the in-memory autotune LRU and the on-disk store, so the two can never
+    disagree about identity; results are weakly memoized per object."""
+    try:
+        hit = _FP_CACHE.get(f)
+    except TypeError:
+        hit = None
+    if hit is not None:
+        return hit
+    h = hashlib.sha256()
+    _hash_update(h, f)
+    name = getattr(f, "__qualname__", None) or getattr(
+        f, "__name__", type(f).__qualname__)
+    fp = f"{name}:{h.hexdigest()[:16]}"
+    try:
+        _FP_CACHE[f] = fp
+    except TypeError:
+        pass
+    return fp
+
+
+# ---------------------------------------------------------------------------
+# on-disk store
+# ---------------------------------------------------------------------------
+
+STORE_ENV = "REPRO_AUTOTUNE_CACHE"
+_DISK: Optional[dict] = None
+_DISK_PATH: Optional[str] = None
+_STORE_WARNED = False
+
+
+_DISABLE_SENTINELS = ("", "0", "off")
+
+
+def store_path() -> str:
+    """Store location: ``$REPRO_AUTOTUNE_CACHE`` if set (empty, "0" or
+    "off" disable persistence and fall through to the default location),
+    else ``$XDG_CACHE_HOME/repro/autotune.json``."""
+    p = os.environ.get(STORE_ENV)
+    if p and p not in _DISABLE_SENTINELS:
+        return p
+    base = os.environ.get("XDG_CACHE_HOME",
+                          os.path.join(os.path.expanduser("~"), ".cache"))
+    return os.path.join(base, "repro", "autotune.json")
+
+
+def _persist_enabled() -> bool:
+    return os.environ.get(STORE_ENV, "on") not in _DISABLE_SENTINELS
+
+
+def load_store(path: Optional[str] = None) -> dict:
+    """The parsed on-disk store (cached per path; corrupt/missing -> {};
+    {} without touching disk when persistence is env-disabled and no
+    explicit path is given)."""
+    global _DISK, _DISK_PATH
+    if path is None and not _persist_enabled():
+        return {}
+    path = path or store_path()
+    with _LOCK:
+        if _DISK is not None and _DISK_PATH == path:
+            return _DISK
+    try:
+        with open(path) as fh:
+            data = json.load(fh)
+        if not isinstance(data, dict):
+            data = {}
+    except (OSError, ValueError):
+        data = {}
+    with _LOCK:
+        _DISK, _DISK_PATH = data, path
+        return data
+
+
+def save_store(path: Optional[str] = None) -> Optional[str]:
+    """Atomically write the in-memory store snapshot, merged over whatever
+    is currently on disk (concurrent processes lose single keys at worst,
+    never the file).  Returns the path, or None if the location is
+    unwritable (warned once; tuning still works, it just re-probes) or
+    persistence is env-disabled and no explicit path is given."""
+    global _DISK, _DISK_PATH, _STORE_WARNED
+    if path is None and not _persist_enabled():
+        return None
+    path = path or store_path()
+    try:
+        with open(path) as fh:
+            on_disk = json.load(fh)
+        if not isinstance(on_disk, dict):
+            on_disk = {}
+    except (OSError, ValueError):
+        on_disk = {}
+    with _LOCK:
+        on_disk.update(_DISK or {})
+        data = dict(on_disk)
+    try:
+        d = os.path.dirname(path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".autotune-")
+        try:
+            with os.fdopen(fd, "w") as fh:
+                json.dump(data, fh, indent=2, sort_keys=True)
+                fh.write("\n")
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+    except OSError as e:
+        if not _STORE_WARNED:
+            _STORE_WARNED = True
+            import warnings
+            warnings.warn(f"autotune store not persisted to {path!r}: {e!r}")
+        return None
+    with _LOCK:
+        _DISK, _DISK_PATH = data, path
+    return path
+
+
+def _platform() -> str:
+    """Backend name PLUS device kind: winners tuned on one chip must not
+    be restored on a different one ("tpu" alone would let a v4-tuned
+    store steer a v5p forever with zero re-probing)."""
+    kind = "unknown"
+    try:
+        kind = jax.devices()[0].device_kind.replace(" ", "_")
+    except Exception:       # pragma: no cover - no devices
+        pass
+    return f"{jax.default_backend()}:{kind}"
+
+
+def _store_key(fp: str, n: int, workload: str, symmetric: bool, mm: int,
+               backend: str, platform: str,
+               include_pallas: bool = False) -> str:
+    return "|".join([fp, f"n{n}", workload, f"sym{int(bool(symmetric))}",
+                     f"m{mm}", backend, platform,
+                     f"ip{int(bool(include_pallas))}"])
+
+
+def _cfg_from_entry(entry, source: str) -> Optional[TunedConfig]:
+    try:
+        blk_m = entry.get("blk_m")
+        return TunedConfig(csize=int(entry["csize"]),
+                           backend=str(entry["backend"]),
+                           blk_m=int(blk_m) if blk_m else None,
+                           time_s=float(entry.get("time_s", 0.0)),
+                           source=source)
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+def _persist(skey: str, cfg: TunedConfig) -> None:
+    load_store()                    # ensure snapshot loaded for this path
+    with _LOCK:
+        if _DISK is None:
+            return
+        _DISK[skey] = {"csize": cfg.csize, "backend": cfg.backend,
+                       "blk_m": cfg.blk_m, "time_s": round(cfg.time_s, 6),
+                       "jax": jax.__version__,
+                       "saved_at": round(time.time(), 1)}
+    save_store()
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+
+def _time_once(fn, reps: int = 3,
+               deadline_s: Optional[float] = 0.25) -> float:
+    """Best-of-k wall time under a deadline budget.
+
+    One untimed call compiles and warms the executable, then up to ``reps``
+    timed reps run, stopping early (after at least one) once ``deadline_s``
+    of measurement has elapsed.  Returns the MINIMUM: the executables are
+    deterministic, so anything above the fastest rep is scheduler/allocator
+    noise -- best-of-k converges faster than a median at equal budget."""
+    global _PROBES_RUN
+    _PROBES_RUN += 1
     jax.block_until_ready(fn())          # compile + warmup
-    times = []
-    for _ in range(reps):
+    best = float("inf")
+    t_start = time.perf_counter()
+    for _ in range(max(1, int(reps))):
         t0 = time.perf_counter()
         jax.block_until_ready(fn())
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2]
+        best = min(best, time.perf_counter() - t0)
+        _PROBES_RUN += 1
+        if (deadline_s is not None
+                and time.perf_counter() - t_start >= deadline_s):
+            break
+    return best
 
 
-def autotune_csize(f, n: int, m=None, symmetric: bool = False,
-                   backend: str = "auto", mesh=None, options=(),
-                   workload: str = "batched_hvp", probe_m: int = 32,
-                   reps: int = 3, seed: int = 0) -> int:
-    """Measured argmin csize for ``workload`` ("batched_hvp", "hvp" or
-    "hessian") of ``f`` at dimension n.
+def _probe_m(m, probe_m: int = 32) -> int:
+    mm = int(m) if m else probe_m
+    return max(8, min(mm, probe_m * 4))
 
-    Returns the fastest candidate (power-of-two divisors of n, lane-capped).
-    Individually infeasible candidates (e.g. pallas divisibility) are
-    skipped; if EVERY candidate fails the configuration is broken and a
+
+def _telemetry_hint(fp: str, n: int, symmetric: bool, workload: str):
+    """(backend, csize, blk_m) of the best live-traffic measurement for this
+    (f, n, symmetric, workload), or None.  Seeds the sweep order so a tight
+    deadline still probes the known-good configuration first."""
+    from .registry import execution_stats
+    best, best_us = None, float("inf")
+    for rec in execution_stats():
+        if rec.get("workload") != workload:
+            continue
+        sig = rec.get("signature")
+        try:
+            sf, sn, sc, ssym, _sbk, smesh, _swl, sopts = sig
+        except (TypeError, ValueError):
+            continue
+        if sn != n or bool(ssym) != bool(symmetric) or smesh is not None:
+            continue
+        try:
+            if function_fingerprint(sf) != fp:
+                continue
+        except Exception:
+            continue
+        us = min((b["us_per_point_min"] for b in rec["by_bucket"].values()),
+                 default=None)
+        if us is not None and us < best_us:
+            blk_m = dict(sopts).get("blk_m") if sopts else None
+            best = (rec["backend"], int(sc), blk_m)
+            best_us = us
+    return best
+
+
+def _combo_grid(fp: str, n: int, mm: int, symmetric: bool, backend: str,
+                mesh, workload: str, include_pallas: bool,
+                pinned_blk_m: Optional[int] = None):
+    """The joint candidate grid, in measurement order: telemetry hint
+    first, then the §5 model argmin, then the rest by static priority.
+    A caller-pinned blk_m (in the plan options) is honored, not swept."""
+    csizes = opmodel.pruned_csize_candidates(n, symmetric)
+    argmin = opmodel.model_csize(n, symmetric)
+    csizes = [argmin] + [c for c in csizes if c != argmin]
+
+    if mesh is not None:
+        # never steal a mesh plan from the sharded backend: csize-only
+        # sweep through the plan-level "auto" resolution (PR 1 behavior)
+        backends = ["auto"]
+    elif backend != "auto":
+        backends = [backend]
+    else:
+        from .registry import list_backends
+        backends = [
+            name for name, s in sorted(list_backends().items(),
+                                       key=lambda kv: -kv[1].priority)
+            if workload in s.workloads and not s.requires_mesh
+            and name != "reference"
+            and (name != "pallas" or include_pallas)]
+
+    if pinned_blk_m is not None:
+        blk_ms = [int(pinned_blk_m)]
+    else:
+        blk_ms = [b for b in (4, 8, 16) if b <= mm] or [mm]
+    combos = []
+    for bk in backends:
+        for c in (csizes if bk not in _NON_CHUNKED else [argmin]):
+            for bm in (blk_ms if bk == "pallas" else [None]):
+                combos.append((bk, c, bm))
+
+    hint = _telemetry_hint(fp, n, symmetric, workload)
+    if hint is not None:
+        if hint in combos:
+            combos.remove(hint)
+            combos.insert(0, hint)
+        else:
+            # recorded plans often carry no blk_m option: fall back to a
+            # (backend, csize) match so the known-good configuration still
+            # leads the sweep under a tight deadline
+            for i, (bk, c, _bm) in enumerate(combos):
+                if bk == hint[0] and c == hint[1]:
+                    combos.insert(0, combos.pop(i))
+                    break
+    return combos
+
+
+# ---------------------------------------------------------------------------
+# the joint tuner
+# ---------------------------------------------------------------------------
+
+def autotune(f, n: int, m=None, symmetric: bool = False,
+             backend: str = "auto", mesh=None, options=(),
+             workload: str = "batched_hvp", probe_m: int = 32,
+             reps: int = 3, seed: int = 0,
+             deadline_s: Optional[float] = None,
+             rep_deadline_s: Optional[float] = 0.25,
+             use_store: bool = True,
+             include_pallas: Optional[bool] = None) -> TunedConfig:
+    """Measured argmin over the joint (csize, backend, blk_m) grid for
+    ``workload`` of ``f`` at dimension n.
+
+    Resolution order: in-memory memo -> on-disk store (no probes run on a
+    hit -- the persistence contract) -> microbenchmark sweep.  The sweep
+    compiles each candidate and wall-clocks it best-of-``reps`` on a small
+    synthetic probe batch; ``deadline_s`` bounds the WHOLE sweep (the
+    telemetry-hinted and model-argmin candidates are probed first, so an
+    exhausted budget still returns a sensible winner), ``rep_deadline_s``
+    bounds each candidate's timed reps.  Individually infeasible candidates
+    are skipped; if EVERY candidate fails the configuration is broken and a
     RuntimeError chains the root cause.
-    Memoized on (f, n, workload, probe batch size, symmetric, backend,
-    mesh, options) -- the probe shapes the measurement, so callers with
-    different m hints or workloads tune separately.  ``plan(csize=
-    "autotune")`` tunes batched_hvp when an m hint is given, else hvp."""
+
+    Memoized on (fingerprint, n, workload, probe batch size, symmetric,
+    backend, mesh, options, include_pallas); persisted (mesh-less plans
+    only) under (fingerprint, n, workload, symmetric, probe m, backend,
+    platform incl. device kind, include_pallas) -- options shape the
+    probe but are not part of the persistent key.
+    ``plan(csize="autotune")`` tunes batched_hvp when an m hint is given,
+    else hvp."""
     from .plan import plan as make_plan
 
-    if workload not in ("batched_hvp", "hvp", "hessian"):
+    if workload not in _TUNABLE_WORKLOADS:
         raise ValueError(f"cannot autotune workload {workload!r}")
     if backend != "auto":
         from .registry import get_backend
         get_backend(backend)            # fail fast on typos
-    mm = int(m) if m else probe_m
-    mm = max(8, min(mm, probe_m * 4))
-    key = (f, n, workload, mm, bool(symmetric), backend, mesh,
-           tuple(options))
-    hit = _AUTOTUNE_CACHE.get(key)
-    if hit is not None:
-        _AUTOTUNE_CACHE.move_to_end(key)
-        return hit
+    n = int(n)
+    mm = _probe_m(m, probe_m)
+    options = tuple(options)
+    fp = function_fingerprint(f)
+    if include_pallas is None:
+        # interpret-mode pallas on CPU is a correctness path: probing it
+        # wastes the budget on a backend auto would never serve
+        include_pallas = jax.default_backend() == "tpu"
+    include_pallas = bool(include_pallas)
+
+    # include_pallas is part of BOTH keys: an explicit include_pallas=True
+    # call must never be answered by a cached sweep that excluded pallas
+    key = (fp, n, workload, mm, bool(symmetric), backend, mesh, options,
+           include_pallas)
+    with _LOCK:
+        hit = _AUTOTUNE_CACHE.get(key)
+        if hit is not None:
+            _AUTOTUNE_CACHE.move_to_end(key)
+            return hit
+
+    skey = _store_key(fp, n, workload, symmetric, mm, backend, _platform(),
+                      include_pallas)
+    persistable = use_store and mesh is None and _persist_enabled()
+    if persistable:
+        entry = load_store().get(skey)
+        cfg = _cfg_from_entry(entry, "disk") if entry else None
+        if cfg is not None and _feasible(cfg, workload):
+            _remember(key, skey, backend, cfg,
+                      consultable=(backend == "auto"
+                                   and cfg.backend != "auto"))
+            return cfg
+
     rng = np.random.RandomState(seed)
     A = np.asarray(rng.uniform(-2, 2, (mm, n)), np.float32)
     V = np.asarray(rng.randn(mm, n), np.float32)
 
-    best_c, best_t = None, float("inf")
+    best = None
     last_err = None
-    for c in opmodel.csize_candidates(n):
+    t_sweep = time.perf_counter()
+    for bk, c, bm in _combo_grid(fp, n, mm, symmetric, backend, mesh,
+                                 workload, include_pallas,
+                                 pinned_blk_m=dict(options).get("blk_m")):
+        if (deadline_s is not None and best is not None
+                and time.perf_counter() - t_sweep >= deadline_s):
+            break
+        opts = dict(options)
+        if bm is not None:
+            opts["blk_m"] = bm
         try:
-            p = make_plan(f, n, m=mm, csize=c, backend=backend,
-                          symmetric=symmetric, mesh=mesh,
-                          options=dict(options))
+            p = make_plan(f, n, m=mm, csize=c, backend=bk,
+                          symmetric=symmetric, mesh=mesh, options=opts)
             if workload == "batched_hvp":
                 run = lambda: p.batched_hvp(A, V)
             elif workload == "hvp":
                 run = lambda: p.hvp(A[0], V[0])
             else:
                 run = lambda: p.hessian(A[0])
-            t = _time_once(run, reps=reps)
+            t = _time_once(run, reps=reps, deadline_s=rep_deadline_s)
         except Exception as e:   # a single infeasible candidate is fine
             last_err = e
             continue
-        if t < best_t:
-            best_c, best_t = c, t
-    if best_c is None:
+        if best is None or t < best.time_s:
+            best = TunedConfig(csize=c, backend=bk, blk_m=bm, time_s=t,
+                               source="sweep")
+    if best is None:
         # EVERY candidate failed: f/backend/mesh is broken, not untuned
         raise RuntimeError(
-            f"autotune: no csize candidate ran for n={n}, "
+            f"autotune: no (csize, backend, blk_m) candidate ran for n={n}, "
             f"backend={backend!r}") from last_err
-    _AUTOTUNE_CACHE[key] = best_c
-    while len(_AUTOTUNE_CACHE) > AUTOTUNE_CACHE_MAXSIZE:
-        _AUTOTUNE_CACHE.popitem(last=False)
-    return best_c
+    _remember(key, skey, backend, best,
+              consultable=(backend == "auto" and mesh is None
+                           and best.backend != "auto"))
+    if persistable:
+        _persist(skey, best)
+    return best
+
+
+def _feasible(cfg: TunedConfig, workload: str) -> bool:
+    """A restored record must name a live backend that still serves the
+    workload (registry contents can change across versions)."""
+    if cfg.backend == "auto":
+        return True
+    try:
+        from .registry import get_backend
+        return workload in get_backend(cfg.backend).workloads
+    except Exception:
+        return False
+
+
+def _remember(key, skey: str, backend_req: str, cfg: TunedConfig, *,
+              consultable: bool) -> None:
+    global _TUNED_VERSION
+    with _LOCK:
+        _AUTOTUNE_CACHE[key] = cfg
+        while len(_AUTOTUNE_CACHE) > AUTOTUNE_CACHE_MAXSIZE:
+            _AUTOTUNE_CACHE.popitem(last=False)
+        # only concrete joint winners steer backend="auto" resolution: a
+        # mesh sweep resolves per-plan (cfg.backend == "auto") and its
+        # store key omits the mesh, so writing it would clobber the flat
+        # plan's winner for the same (f, n, workload)
+        if consultable:
+            _TUNED[skey] = cfg
+            _TUNED_VERSION += 1
+
+
+def lookup_tuned(plan, workload: str) -> Optional[TunedConfig]:
+    """The persisted joint-tune winner matching a plan's signature (flat,
+    mesh-less, backend swept as "auto"), or None.  This is the consult
+    ``registry.resolve_backend`` performs for ``backend="auto"`` plans --
+    it never runs a probe, only reads the in-memory table and the disk
+    snapshot."""
+    if plan.n is None or plan.mesh is not None:
+        return None
+    if workload not in _TUNABLE_WORKLOADS:
+        return None
+    fp = function_fingerprint(plan.f)
+    # consult the default-sweep variant (include_pallas follows the
+    # platform, matching what plan(csize="autotune") tunes)
+    skey = _store_key(fp, plan.n, workload, plan.symmetric,
+                      _probe_m(plan.m), "auto", _platform(),
+                      jax.default_backend() == "tpu")
+    with _LOCK:
+        cfg = _TUNED.get(skey)
+    if cfg is not None:
+        return cfg
+    if not _persist_enabled():
+        return None
+    entry = load_store().get(skey)
+    if not entry:
+        return None
+    cfg = _cfg_from_entry(entry, "disk")
+    if cfg is None or not _feasible(cfg, workload):
+        return None
+    global _TUNED_VERSION
+    with _LOCK:
+        _TUNED[skey] = cfg
+        _TUNED_VERSION += 1
+    return cfg
+
+
+def autotune_csize(f, n: int, m=None, symmetric: bool = False,
+                   backend: str = "auto", mesh=None, options=(),
+                   workload: str = "batched_hvp", probe_m: int = 32,
+                   reps: int = 3, seed: int = 0) -> int:
+    """Measured argmin csize (back-compat facade over the joint tuner:
+    same sweep, returns only the chunk size).  See ``autotune``."""
+    return autotune(f, n, m=m, symmetric=symmetric, backend=backend,
+                    mesh=mesh, options=options, workload=workload,
+                    probe_m=probe_m, reps=reps, seed=seed).csize

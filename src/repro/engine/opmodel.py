@@ -9,8 +9,10 @@ benchmarks share one source of truth):
                 c* = sqrt(n/2))
 
 ``model_csize`` evaluates the relevant formula over the feasible candidate
-set (divisors of n, power-of-two biased, capped at the VPU lane width) and
-returns the argmin -- a pure static decision, no tracing or timing.
+set (powers of two up to the first covering n, capped at the VPU lane
+width; ragged tails are masked by every schedule since kernel v2, so
+divisibility is not required) and returns the argmin -- a pure static
+decision, no tracing or timing.
 ``count_jaxpr_ops`` stays as the empirical validator used by the opcount
 benchmark suite.
 """
@@ -25,7 +27,8 @@ import numpy as np
 
 __all__ = [
     "mults_chunk_hess", "mults_schunk_hess", "csize_candidates",
-    "model_csize", "count_jaxpr_ops", "LANE_WIDTH",
+    "pruned_csize_candidates", "model_csize", "count_jaxpr_ops",
+    "LANE_WIDTH",
 ]
 
 # TPU VPU lane width: the chunk axis vectorizes onto lanes, so csize beyond
@@ -44,15 +47,40 @@ def mults_schunk_hess(n, c, M):
 
 
 def csize_candidates(n: int) -> list[int]:
-    """Feasible csizes: power-of-two divisors of n (the paper's template
-    instantiations), capped at the lane width; always includes 1."""
+    """Feasible csizes: powers of two up to the first one covering n (the
+    paper instantiated divisors of n; kernel v2 and the vmap schedules mask
+    ragged tails, so non-divisors are first-class -- at n=12, csize=8 or 16
+    beats the old divisor cap of 4 on the heavier test functions, see
+    BENCH_pr3.json), capped at the lane width; always includes 1."""
     cands = []
     c = 1
-    while c <= min(n, LANE_WIDTH):
-        if n % c == 0:
-            cands.append(c)
+    while True:
+        cands.append(c)
+        if c >= min(n, LANE_WIDTH):
+            break
         c *= 2
-    return cands or [1]
+    return cands
+
+
+def pruned_csize_candidates(n: int, symmetric: bool = False,
+                            factor: float = 2.0) -> list[int]:
+    """Candidate csizes worth *measuring*: the §5 model seeds the joint
+    autotuner's grid by dropping candidates whose modeled scalar work
+    exceeds ``factor``x the model minimum.
+
+    The model's known blind spots (lane occupancy, transcendental
+    amortization -- see docs/autotune.md) move the real optimum between
+    neighbors of the model argmin, not to the far tail, so a loose factor
+    keeps every plausible winner while cutting the sweep roughly in half at
+    large n.  The model argmin itself is always kept."""
+    cands = csize_candidates(n)
+    cost = mults_schunk_hess if symmetric else mults_chunk_hess
+    best = min(cost(n, c, 1) for c in cands)
+    keep = [c for c in cands if cost(n, c, 1) <= factor * best]
+    argmin = model_csize(n, symmetric)
+    if argmin not in keep:
+        keep.append(argmin)
+    return sorted(keep)
 
 
 def model_csize(n: int, symmetric: bool = True) -> int:

@@ -292,12 +292,9 @@ def _resolve_csize(f, n, m, csize, symmetric, backend, mesh, options):
             return 4          # pytree workloads: probe-chunk default
         return opmodel.model_csize(n, symmetric)
     if csize == "autotune":
-        if n is None:
-            return 4
-        from .autotune import autotune_csize
-        return autotune_csize(f, n, m=m, symmetric=symmetric,
-                              backend=backend, mesh=mesh, options=options,
-                              workload="batched_hvp" if m else "hvp")
+        # n is None here: flat autotune plans resolve through the joint
+        # tuner in plan() (which also threads the tuned blk_m through)
+        return 4
     raise ValueError(f"csize must be int, 'auto' or 'autotune'; got {csize!r}")
 
 
@@ -331,8 +328,25 @@ def plan(f, n=None, m=None, csize="auto", backend="auto", symmetric=True,
                 "array shapes at execute time) -- omit it entirely for "
                 "single-instance plans")
     opt_items = tuple(sorted(opts.items()))
-    csize = _resolve_csize(f, n, m, csize, symmetric, backend, mesh,
-                           opt_items)
+    if csize == "autotune" and n is not None:
+        # joint (csize, backend, blk_m) microbenchmark; memoized in-process
+        # and persisted to disk, so a warm store resolves without probes
+        from .autotune import autotune
+        cfg = autotune(f, n, m=m, symmetric=bool(symmetric), backend=backend,
+                       mesh=mesh, options=opt_items,
+                       workload="batched_hvp" if m else "hvp")
+        csize = cfg.csize
+        if cfg.backend == "pallas" and cfg.blk_m and "blk_m" not in opts:
+            # thread the swept instance-block size into the plan so the
+            # pallas executable runs the WINNING configuration; the plan's
+            # backend stays "auto" (other workloads may need other
+            # backends) and resolve_backend re-finds cfg.backend via the
+            # tuned-history consult
+            opts["blk_m"] = cfg.blk_m
+            opt_items = tuple(sorted(opts.items()))
+    else:
+        csize = _resolve_csize(f, n, m, csize, symmetric, backend, mesh,
+                               opt_items)
     return CurvaturePlan(f=f, n=n, m=m, csize=int(csize),
                          symmetric=bool(symmetric), backend=backend,
                          mesh=mesh, options=opt_items)

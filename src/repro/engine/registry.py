@@ -122,20 +122,22 @@ def list_backends() -> dict[str, BackendSpec]:
 # Every executed bucket can be reported here: (plan signature, backend,
 # workload) -> measured us/point samples, tagged with the padded bucket size.
 # The CurvatureService records each dispatch; anything else (benchmarks,
-# autotune) may too.  This is the history that a future ``backend="auto"``
-# can learn from instead of static priorities (ROADMAP: "Backend
-# auto-selection telemetry") -- for now it is record + read, selection is
-# unchanged.
+# autotune) may too.  Since PR 3 this history is LIVE: ``backend="auto"``
+# resolution consults it (after the joint autotuner's persisted winners)
+# before falling back to static priorities -- see ``_learned_backend``.
 
 _TELEMETRY_MAXSAMPLES = 256          # ring buffer per (signature, bucket)
 _TELEMETRY: collections.OrderedDict = collections.OrderedDict()
 _TELEMETRY_MAXKEYS = 512             # keys strong-reference f: LRU-bound
+_TELEMETRY_VERSION = 0               # bumps on mutation (consult memo)
 _TELEMETRY_LOCK = threading.Lock()
 
 
 def clear_telemetry() -> None:
+    global _TELEMETRY_VERSION
     with _TELEMETRY_LOCK:
         _TELEMETRY.clear()
+        _TELEMETRY_VERSION += 1
 
 
 def record_execution(signature, backend: str, workload: str, *,
@@ -147,6 +149,7 @@ def record_execution(signature, backend: str, workload: str, *,
     charged to the REAL points, so padding waste shows up as a higher
     us/point at ragged sizes.  Thread-safe: the service dispatcher calls
     this from its own thread."""
+    global _TELEMETRY_VERSION
     if n_points <= 0:
         return
     us_per_point = elapsed_s / n_points * 1e6
@@ -154,7 +157,7 @@ def record_execution(signature, backend: str, workload: str, *,
         entry = _TELEMETRY.get(signature)
         if entry is None:
             entry = {"backend": backend, "workload": workload,
-                     "by_bucket": {}}
+                     "best_us": float("inf"), "by_bucket": {}}
             _TELEMETRY[signature] = entry
             while len(_TELEMETRY) > _TELEMETRY_MAXKEYS:
                 _TELEMETRY.popitem(last=False)
@@ -163,6 +166,13 @@ def record_execution(signature, backend: str, workload: str, *,
         samples = entry["by_bucket"].setdefault(
             int(bucket), collections.deque(maxlen=_TELEMETRY_MAXSAMPLES))
         samples.append(float(us_per_point))
+        # the consult path reads only the monotonic best-ever; bumping the
+        # version ONLY on improvement keeps the _LEARNED_CACHE memo hot
+        # under steady-state serving (a non-improving sample cannot change
+        # any consult decision)
+        if us_per_point < entry["best_us"]:
+            entry["best_us"] = float(us_per_point)
+            _TELEMETRY_VERSION += 1
 
 
 def execution_stats() -> list[dict]:
@@ -188,12 +198,106 @@ def execution_stats() -> list[dict]:
     return out
 
 
+def _telemetry_best(plan, workload: str, names: dict, fp: str):
+    """The capable backend with the best recorded min us/point for this
+    exact (f, n, csize, symmetric, workload) signature, or None.
+
+    Signatures are the plan cache keys the service reports; the function
+    slot is matched by identity first, fingerprint second, so history
+    recorded by another plan object for the same function still counts.
+    Decisions use the monotonic per-signature best-ever us/point (not the
+    sample rings), so they only change when a backend improves.
+    Negative-priority backends (correctness-only paths -- interpret-mode
+    pallas off-TPU) never steal auto resolution here, however good their
+    recorded numbers look."""
+    from .autotune import function_fingerprint
+    with _TELEMETRY_LOCK:
+        items = [(k, v["backend"], v["workload"],
+                  v.get("best_us", float("inf")))
+                 for k, v in _TELEMETRY.items()]
+    best_name, best_us = None, float("inf")
+    for sig, backend, wl, us in items:
+        spec = names.get(backend)
+        if (wl != workload or spec is None or spec.priority < 0
+                or not us < float("inf")):
+            continue
+        try:
+            sf, sn, sc, ssym, _sbk, smesh = sig[:6]
+        except (TypeError, ValueError):
+            continue
+        if (sn != plan.n or sc != plan.csize
+                or bool(ssym) != plan.symmetric or smesh is not None):
+            continue
+        if sf is not plan.f:
+            try:
+                if function_fingerprint(sf) != fp:
+                    continue
+            except Exception:   # pragma: no cover
+                continue
+        if us < best_us:
+            best_name, best_us = backend, us
+    return best_name
+
+
+# memoized consult decisions: the learned pick for a plan signature only
+# changes when the tuner's consult table or the telemetry table mutate, so
+# resolve_backend (called on EVERY plan execution) pays two dict lookups on
+# the steady-state path instead of a telemetry scan
+_LEARNED_CACHE: collections.OrderedDict = collections.OrderedDict()
+_LEARNED_CACHE_MAXSIZE = 512
+
+
+def _learned_backend(plan, workload: str, candidates):
+    """PR 3: what ``backend="auto"`` learned about this plan -- the joint
+    autotuner's persisted winner first (exact csize match so a tuned
+    record never steers a differently-chunked plan), then execution
+    telemetry -- before static priorities get a say."""
+    if plan.mesh is not None or plan.n is None:
+        return None
+    names = {s.name: s for s in candidates}
+    # NB name-level imports: the package re-exports the autotune FUNCTION
+    # under the submodule's name, so `from . import autotune` would bind
+    # the function, not the module
+    try:
+        from .autotune import (function_fingerprint, lookup_tuned,
+                               tuned_version)
+        fp = function_fingerprint(plan.f)
+    except Exception:       # pragma: no cover - consult must never break
+        return None
+    key = (fp, plan.n, plan.csize, plan.symmetric, plan.m, workload)
+    versions = (tuned_version(), _TELEMETRY_VERSION)
+    with _TELEMETRY_LOCK:
+        hit = _LEARNED_CACHE.get(key)
+        if hit is not None and hit[0] == versions:
+            _LEARNED_CACHE.move_to_end(key)
+            return names.get(hit[1])
+
+    name = None
+    try:
+        cfg = lookup_tuned(plan, workload)
+    except Exception:       # pragma: no cover
+        cfg = None
+    if (cfg is not None and cfg.backend in names
+            and cfg.csize == plan.csize):
+        name = cfg.backend
+    else:
+        name = _telemetry_best(plan, workload, names, fp)
+    with _TELEMETRY_LOCK:
+        _LEARNED_CACHE[key] = (versions, name)
+        while len(_LEARNED_CACHE) > _LEARNED_CACHE_MAXSIZE:
+            _LEARNED_CACHE.popitem(last=False)
+    return names.get(name)
+
+
 def resolve_backend(plan, workload: str) -> BackendSpec:
     """Pick the backend for a (plan, workload) pair.
 
-    Explicit names are honored (error if incapable); "auto" picks the
-    highest-priority capable backend -- mesh-carrying plans prefer
-    ``sharded``, pytree plans fall through to the pytree backends."""
+    Explicit names are honored (error if incapable).  "auto" consults
+    learned history first -- the joint autotuner's persisted winner for
+    this (function, n, workload) signature, then live execution telemetry
+    -- and only then falls back to the highest-priority capable backend:
+    mesh-carrying plans prefer ``sharded``, pytree plans fall through to
+    the pytree backends."""
     _ensure_builtin_backends()
     if plan.backend != "auto":
         spec = get_backend(plan.backend)
@@ -207,4 +311,7 @@ def resolve_backend(plan, workload: str) -> BackendSpec:
         raise ValueError(
             f"no registered backend supports workload {workload!r} for "
             f"plan {plan.describe()}; registered: {sorted(_REGISTRY)}")
+    learned = _learned_backend(plan, workload, candidates)
+    if learned is not None:
+        return learned
     return max(candidates, key=lambda s: (s.priority, s.name))

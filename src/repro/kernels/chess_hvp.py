@@ -6,15 +6,36 @@ Paper (A100):  one CUDA thread per (instance, row, chunk); hDual components
 Here (TPU):    grid = (instance-blocks, rows, chunks). Each grid cell holds
                an hDual VECTOR of the whole n-variable input in VMEM with a
                trailing csize chunk axis (lane-vectorized on the VPU) and a
-               block of instances on the sublane axis. The per-row dot
-               product accumulates across the chunk grid dimension directly
-               into the output block (out block index is chunk-independent,
-               so Mosaic keeps it resident in VMEM -- the shared-memory
-               reduction becomes a VMEM accumulator).
+               block of instances on the sublane axis. The output block is
+               the FULL padded row vector (blk_m, n_pad) whose index map
+               ignores the row/chunk grid dims, so Mosaic keeps it resident
+               in VMEM across the whole (row, chunk) sweep -- the paper's
+               shared-memory reduction becomes a VMEM accumulator, and the
+               symmetric schedule's mirrored contributions scatter into the
+               same resident block.
+
+Kernel v2 (PR 3) lifts the seed kernel's two preconditions:
+
+  ragged tails    : the chunk grid is ceil(n / csize); seed columns past n
+                    never match the one-hot iota so their dij lanes are
+                    zero, and every in-kernel contribution is masked on
+                    ``col < n``.  Any ``csize >= 1`` is served.
+  m % blk_m       : the wrapper pads the instance axis by edge replication
+                    (padding rows stay inside f's domain; see
+                    engine.pad_rows for the same rationale) and slices the
+                    padding back off.  Any ``m >= 1`` is served.
+
+and adds the paper's SYMMETRIC schedule (Alg. 8 mapped onto the L2 grid):
+only chunks at-or-right-of the diagonal chunk run (cells below it skip all
+work under ``pl.when``, so ~half the second-order tangent sweeps
+disappear); inside the boundary chunk, columns below the diagonal are
+masked out of the direct contribution, and every strictly-above-diagonal
+element H[i,j] also mirrors H[i,j]*v[i] into r[j] through the resident
+output block.
 
 VMEM footprint per grid cell = n * blk_m * (2*csize + 2) * 4B -- the paper's
 csize <-> fast-memory dial, verbatim, with VMEM playing the register/L1
-role (DESIGN.md §3).
+role (DESIGN.md §3) -- plus the (blk_m, n_pad) resident output row block.
 
 The kernel is generic over any ``f`` written against repro.core.hmath /
 HDual ops (trace-time polymorphism = the paper's template instantiation);
@@ -36,72 +57,131 @@ from repro.core.hdual import HDual
 __all__ = ["chess_hvp_pallas"]
 
 
-def _kernel(a_ref, v_ref, *rest, f, n, csize, blk_m, out_dtype):
+def _kernel(a_ref, v_ref, *rest, f, n, n_pad, nchunk, csize, blk_m,
+            symmetric, out_dtype):
     consts = rest[:-1]
     out_ref = rest[-1]
     i = pl.program_id(1)                       # Hessian row
-    c = pl.program_id(2)                       # chunk index
-    cstart = c * csize
+    c = pl.program_id(2)                       # chunk grid index
+    # symmetric schedule: the chunk grid dim counts chunks at-or-right-of
+    # the diagonal chunk (Alg. 8 line 4: startchunk = i / csize); cells
+    # that would fall past the last chunk do no work at all.
+    cc = c + i // csize if symmetric else c
+    first = (i == 0) & (c == 0)
 
-    a = a_ref[...].astype(jnp.float32)         # (blk_m, n)
-    at = a.T                                   # (n, blk_m) variables-major
+    def body():
+        cstart = cc * csize
 
-    k2 = jax.lax.broadcasted_iota(jnp.int32, (n, blk_m), 0)
-    di = (k2 == i).astype(jnp.float32)
-    k3 = jax.lax.broadcasted_iota(jnp.int32, (n, blk_m, csize), 0)
-    l3 = jax.lax.broadcasted_iota(jnp.int32, (n, blk_m, csize), 2)
-    dj = (k3 == cstart + l3).astype(jnp.float32)
-    dij = jnp.zeros((n, blk_m, csize), jnp.float32)
+        a = a_ref[...].astype(jnp.float32)     # (blk_m, n)
+        at = a.T                               # (n, blk_m) variables-major
 
-    y = HDual(at, di, dj, dij)
-    r = f(y, *[cr[...] for cr in consts])      # HDual: val (blk_m,), dij (blk_m, csize)
+        k2 = jax.lax.broadcasted_iota(jnp.int32, (n, blk_m), 0)
+        di = (k2 == i).astype(jnp.float32)
+        k3 = jax.lax.broadcasted_iota(jnp.int32, (n, blk_m, csize), 0)
+        l3 = jax.lax.broadcasted_iota(jnp.int32, (n, blk_m, csize), 2)
+        # ragged tail: columns cstart+l >= n match no variable -> zero dj
+        # lanes -> zero dij lanes; the masks below drop them explicitly.
+        dj = (k3 == cstart + l3).astype(jnp.float32)
+        dij = jnp.zeros((n, blk_m, csize), jnp.float32)
 
-    v = v_ref[...].astype(jnp.float32)         # (blk_m, n)
-    cols = cstart + jax.lax.broadcasted_iota(jnp.int32, (blk_m, csize), 1)
-    vc = jnp.take_along_axis(v, jnp.minimum(cols, n - 1), axis=1)
-    contrib = jnp.sum(jnp.where(cols < n, r.dij * vc, 0.0), axis=1)
+        y = HDual(at, di, dj, dij)
+        r = f(y, *[cr[...] for cr in consts])  # HDual: dij (blk_m, csize)
 
-    @pl.when(c == 0)
-    def _init():
-        out_ref[:, 0] = contrib.astype(out_dtype)
+        v = v_ref[...].astype(jnp.float32)     # (blk_m, n_pad), zero-padded
+        cols = cstart + jax.lax.broadcasted_iota(jnp.int32, (blk_m, csize), 1)
+        vc = jnp.take_along_axis(v, cols, axis=1)       # v[:, cstart:+csize]
+        valid = cols < n
+        # direct: H[i, j] * v[j] -> r[i].  Symmetric masks j < i inside the
+        # boundary chunk -- those entries arrive via row j's mirror instead.
+        direct_mask = valid & (cols >= i) if symmetric else valid
+        contrib = jnp.sum(jnp.where(direct_mask, r.dij * vc, 0.0), axis=1)
 
-    @pl.when(c > 0)
-    def _acc():
-        out_ref[:, 0] = out_ref[:, 0] + contrib.astype(out_dtype)
+        rowsel = (jax.lax.broadcasted_iota(jnp.int32, (blk_m, n_pad), 1)
+                  == i).astype(jnp.float32)
+        add = contrib[:, None] * rowsel                  # (blk_m, n_pad)
+
+        if symmetric:
+            # mirror: every strictly-above-diagonal H[i, j] also contributes
+            # H[i, j] * v[i] to r[j] (Alg. 8 lines 12-15).  Scatter through a
+            # chunk->row one-hot so the write stays a dense VPU op on the
+            # resident output block.
+            vi = jnp.take_along_axis(
+                v, jnp.full((blk_m, 1), i, jnp.int32), axis=1)[:, 0]
+            mvals = jnp.where(valid & (cols > i), r.dij, 0.0) * vi[:, None]
+            lj = jax.lax.broadcasted_iota(jnp.int32, (csize, n_pad), 0)
+            jj = jax.lax.broadcasted_iota(jnp.int32, (csize, n_pad), 1)
+            sel = (jj == cstart + lj).astype(jnp.float32)
+            add = add + jnp.sum(mvals[:, :, None] * sel[None, :, :], axis=1)
+
+        @pl.when(first)
+        def _init():
+            out_ref[...] = add.astype(out_dtype)
+
+        @pl.when(jnp.logical_not(first))
+        def _acc():
+            out_ref[...] = out_ref[...] + add.astype(out_dtype)
+
+    if symmetric:
+        pl.when(cc < nchunk)(body)
+    else:
+        body()
 
 
 def chess_hvp_pallas(f: Callable, A, V, csize: int, *,
                      consts: Sequence = (), blk_m: int = 8,
-                     interpret: bool = True):
+                     symmetric: bool = False, interpret: bool = True):
     """Batched HVP out[m] = H_f(A[m]) @ V[m] via the L2 grid schedule.
 
-    A, V: (m, n). Returns (m, n). n % csize == 0 (paper's assumption);
-    m % blk_m == 0.
+    A, V: (m, n). Returns (m, n).  Serves ANY (m, n, csize) with m >= 1 and
+    csize >= 1: ragged tails (csize does not divide n) are masked in-kernel
+    and the instance axis is padded up to a blk_m multiple by edge
+    replication (v2; the seed kernel required csize | n and m % blk_m == 0).
+    ``symmetric=True`` runs the Alg. 8 schedule: only at-or-right-of-diagonal
+    chunks are evaluated (~half the tangent work) and strictly-upper entries
+    are mirrored through the VMEM output accumulator.
     """
     m, n = A.shape
     assert V.shape == (m, n)
-    assert n % csize == 0, (n, csize)
-    assert m % blk_m == 0, (m, blk_m)
-    nchunk = n // csize
-    grid = (m // blk_m, n, nchunk)
+    assert m >= 1 and csize >= 1, (m, csize)
+    blk_m = max(1, min(blk_m, m))
+    nchunk = -(-n // csize)                    # ceil-div chunk grid
+    n_pad = nchunk * csize
+    m_pad = -(-m // blk_m) * blk_m
+    if m_pad != m:
+        # edge replication keeps padded instances inside f's domain (e.g.
+        # Ackley's sqrt is non-differentiable at the zero vector)
+        A = jnp.concatenate(
+            [A, jnp.broadcast_to(A[-1:], (m_pad - m, n))], axis=0)
+        V = jnp.concatenate(
+            [V, jnp.broadcast_to(V[-1:], (m_pad - m, n))], axis=0)
+    if n_pad != n:
+        # only V is padded (zeros beyond n never contribute); A keeps the
+        # true n so f sees the real evaluation point
+        V = jnp.concatenate(
+            [V, jnp.zeros((m_pad, n_pad - n), V.dtype)], axis=1)
+    grid = (m_pad // blk_m, n, nchunk)
 
     in_specs = [
-        pl.BlockSpec((blk_m, n), lambda mi, i, c: (mi, 0)),   # A
-        pl.BlockSpec((blk_m, n), lambda mi, i, c: (mi, 0)),   # V
+        pl.BlockSpec((blk_m, n), lambda mi, i, c: (mi, 0)),       # A
+        pl.BlockSpec((blk_m, n_pad), lambda mi, i, c: (mi, 0)),   # V
     ]
     for cst in consts:
         in_specs.append(
             pl.BlockSpec(cst.shape,
                          lambda mi, i, c, _nd=cst.ndim: (0,) * _nd))
-    out_spec = pl.BlockSpec((blk_m, 1), lambda mi, i, c: (mi, i))
+    # full-row output block, resident across the (row, chunk) sweep: both
+    # the per-row dot product and the symmetric mirror accumulate into it
+    out_spec = pl.BlockSpec((blk_m, n_pad), lambda mi, i, c: (mi, 0))
 
-    kernel = functools.partial(_kernel, f=f, n=n, csize=csize, blk_m=blk_m,
-                               out_dtype=A.dtype)
-    return pl.pallas_call(
+    kernel = functools.partial(_kernel, f=f, n=n, n_pad=n_pad, nchunk=nchunk,
+                               csize=csize, blk_m=blk_m,
+                               symmetric=bool(symmetric), out_dtype=A.dtype)
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct((m, n), A.dtype),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), A.dtype),
         interpret=interpret,
     )(A, V, *consts)
+    return out[:m, :n]

@@ -48,11 +48,11 @@ def _fn_and_consts(function: str, n: int):
 # ---------------------------------------------------------------------------
 
 def _pallas_supports(plan, workload):
-    # the kernel assumes csize | n (paper's assumption; no ragged tail);
-    # a mesh-carrying plan asked for sharding -- never steal it from the
-    # sharded backend even where pallas outranks it (TPU)
-    return (plan.mesh is None and plan.n is not None
-            and plan.n % plan.csize == 0)
+    # v2 kernel serves any (m, n, csize): ragged tails are masked in-kernel
+    # and the instance axis is padded to a blk_m multiple.  The only
+    # remaining veto: a mesh-carrying plan asked for sharding -- never
+    # steal it from the sharded backend even where pallas outranks it (TPU)
+    return plan.mesh is None and plan.n is not None
 
 
 def _pallas_make(plan, workload):
@@ -64,9 +64,13 @@ def _pallas_make(plan, workload):
 
     def run(A, V):
         m = A.shape[0]                          # static at trace time
-        blk_m = blk_m_opt or max(b for b in (8, 4, 2, 1) if m % b == 0)
+        # the wrapper pads m up to a blk_m multiple, so blk_m is purely a
+        # tuning dial (the joint autotuner sweeps it); default to the
+        # sublane width, capped so tiny batches don't pad 8x
+        blk_m = blk_m_opt or min(8, m)
         return chess_hvp_pallas(kernel_f, A, V, plan.csize, consts=consts,
-                                blk_m=blk_m, interpret=interpret)
+                                blk_m=blk_m, symmetric=plan.symmetric,
+                                interpret=interpret)
     return run
 
 
@@ -77,12 +81,15 @@ register_backend(BackendSpec(
     # interpret mode it is a correctness path only, so auto never picks it
     priority=40 if jax.default_backend() == "tpu" else -5,
     supports=_pallas_supports,
-    doc="Fig. 2 L2 grid kernel (Pallas; interpret=True off-TPU)"))
+    doc="Fig. 2 L2 grid kernel v2 (symmetric + ragged; Pallas; "
+        "interpret=True off-TPU)"))
 
 
-@partial(jax.jit, static_argnames=("function", "csize", "blk_m", "interpret"))
+@partial(jax.jit, static_argnames=("function", "csize", "blk_m", "symmetric",
+                                   "interpret"))
 def chess_hvp(A, V, *, function: str = "rosenbrock", csize: int = 4,
-              blk_m: int = 8, interpret: bool | None = None):
+              blk_m: int = 8, symmetric: bool = False,
+              interpret: bool | None = None):
     """Batched HVP on one of the paper's test-function families.
 
     A, V: (m, n) -> (m, n)."""
@@ -91,7 +98,7 @@ def chess_hvp(A, V, *, function: str = "rosenbrock", csize: int = 4,
     n = A.shape[-1]
     f, consts = _fn_and_consts(function, n)
     return chess_hvp_pallas(f, A, V, csize, consts=consts, blk_m=blk_m,
-                            interpret=interpret)
+                            symmetric=symmetric, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("bt", "bo", "bk", "interpret"))

@@ -2,8 +2,19 @@
 benches must see the single real CPU device; only launch/dryrun.py (run as
 its own process) fakes 512 devices."""
 
+import os
+import tempfile
+
 import jax
 import pytest
+
+# isolate the autotune disk store: tests must neither write the developer's
+# real ~/.cache store nor be steered by winners a previous (or ambient)
+# store persisted.  Session-scoped (not per-test) so in-process persistence
+# tests still see round-trips; set before repro.engine is imported by any
+# test module.
+os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(
+    tempfile.mkdtemp(prefix="repro-autotune-test-"), "autotune.json")
 
 
 @pytest.fixture(scope="session")

@@ -179,10 +179,18 @@ def test_incapable_backend_raises():
         p.executable("hessian")        # pallas only does batched_hvp
     with pytest.raises(KeyError):
         engine.get_backend("no_such_backend")
-    # pallas needs csize | n
-    p_bad = engine.plan(FN["rosenbrock"](6), 6, csize=4, backend="pallas")
-    with pytest.raises(ValueError):
-        p_bad.executable("batched_hvp")
+
+
+def test_pallas_serves_ragged_csize():
+    """The csize | n precondition is gone (kernel v2): pallas serves any
+    flat batched_hvp plan the vmap backends serve."""
+    f = FN["rosenbrock"](6)
+    p = engine.plan(f, 6, csize=4, backend="pallas")
+    A, V = _data(6, 5, seed=9)          # m=5 also exercises blk_m padding
+    out = p.batched_hvp(A, V)
+    want = jnp.stack([ref.hvp_fwdrev(f, A[i], V[i]) for i in range(5)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
 
 
 # ---------------------------------------------------------------------------

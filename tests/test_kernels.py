@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import testfns
 from repro.kernels.ops import (_fn_and_consts, chess_hvp, hdual_linear,
                                hdual_linear_apply)
 from repro.kernels.ref import chess_hvp_ref, hdual_linear_ref
@@ -26,6 +27,86 @@ def test_chess_hvp_sweep(function, m, n, csize, blk_m):
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(want),
         rtol=5e-3, atol=5e-3 * (1 + np.abs(np.asarray(want)).max()))
+
+
+# ---------------------------------------------------------------------------
+# kernel v2: ragged tails, symmetric schedule, instance padding (PR 3)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("function",
+                         ["rosenbrock", "ackley", "fletcher_powell"])
+@pytest.mark.parametrize("m,n,csize,blk_m", [
+    (8, 10, 4, 8),     # ragged: 10 % 4 != 0
+    (8, 9, 2, 4),      # ragged odd n
+    (5, 8, 2, 8),      # m % blk_m != 0 (padded to one 5-row block)
+    (13, 7, 3, 4),     # ragged n AND ragged m
+    (4, 6, 16, 8),     # csize > n (single over-wide chunk)
+])
+@pytest.mark.parametrize("symmetric", [False, True])
+def test_chess_hvp_v2_sweep(function, m, n, csize, blk_m, symmetric):
+    """No csize | n or m % blk_m precondition remains: any flat batched_hvp
+    the vmap backends serve, the kernel serves, on both schedules."""
+    rng = np.random.RandomState(m * 131 + n + csize)
+    A = jnp.asarray(rng.uniform(-2, 2, (m, n)), jnp.float32)
+    V = jnp.asarray(rng.randn(m, n), jnp.float32)
+    out = chess_hvp(A, V, function=function, csize=csize, blk_m=blk_m,
+                    symmetric=symmetric)
+    f, consts = _fn_and_consts(function, n)
+    want = chess_hvp_ref(f, A, V, csize, consts)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(want),
+        rtol=5e-3, atol=5e-3 * (1 + np.abs(np.asarray(want)).max()))
+
+
+@pytest.mark.parametrize("function",
+                         ["rosenbrock", "ackley", "fletcher_powell"])
+def test_symmetric_schedule_matches_vmap_l2(function):
+    """Acceptance: the kernel's symmetric schedule agrees with vmap_l2
+    (fp32 tolerance) on every registered test function."""
+    from repro import engine
+    m, n, csize = 8, 10, 4
+    rng = np.random.RandomState(17)
+    A = jnp.asarray(rng.uniform(-2, 2, (m, n)), jnp.float32)
+    V = jnp.asarray(rng.randn(m, n), jnp.float32)
+    f = testfns.FUNCTIONS[function](n)
+    p_pl = engine.plan(f, n, m=m, csize=csize, backend="pallas",
+                       symmetric=True)
+    p_l2 = engine.plan(f, n, m=m, csize=csize, backend="vmap_l2",
+                       symmetric=True)
+    got = np.asarray(p_pl.batched_hvp(A, V))
+    want = np.asarray(p_l2.batched_hvp(A, V))
+    np.testing.assert_allclose(got, want, rtol=1e-5,
+                               atol=1e-5 * (1 + np.abs(want).max()))
+
+
+def test_symmetric_vs_full_schedules_agree():
+    """Both schedules compute the same HVP (the symmetric one touching
+    roughly half the chunks)."""
+    m, n, csize = 6, 12, 4
+    rng = np.random.RandomState(5)
+    A = jnp.asarray(rng.uniform(-2, 2, (m, n)), jnp.float32)
+    V = jnp.asarray(rng.randn(m, n), jnp.float32)
+    full = chess_hvp(A, V, function="rosenbrock", csize=csize, blk_m=4,
+                     symmetric=False)
+    sym = chess_hvp(A, V, function="rosenbrock", csize=csize, blk_m=4,
+                    symmetric=True)
+    np.testing.assert_allclose(np.asarray(sym), np.asarray(full),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_instance_padding_is_invisible():
+    """Padding rows (edge-replicated to stay in f's domain) must not leak
+    into real outputs: m=9 with blk_m=8 equals the same rows computed
+    unpadded."""
+    n, csize = 8, 4
+    rng = np.random.RandomState(23)
+    A = jnp.asarray(rng.uniform(-2, 2, (9, n)), jnp.float32)
+    V = jnp.asarray(rng.randn(9, n), jnp.float32)
+    padded = chess_hvp(A, V, function="ackley", csize=csize, blk_m=8)
+    exact = chess_hvp(A[:8], V[:8], function="ackley", csize=csize, blk_m=8)
+    np.testing.assert_allclose(np.asarray(padded[:8]), np.asarray(exact),
+                               rtol=1e-6, atol=1e-6)
+    assert padded.shape == (9, n)
 
 
 def test_chess_hvp_matches_jax_hessian():
