@@ -1,0 +1,133 @@
+"""Distributed (L1 row-sharded) HVP benchmark: rows/sec vs mesh shape.
+
+The paper's claim behind the ``sharded_rows`` backend is that Hessian rows
+are independent, so a single large-n HVP scales with the number of row
+shards.  This suite measures the engine-planned sharded_rows executable on
+fake host devices (``--xla_force_host_platform_device_count``, the same
+emulation tier-1's distributed tests use) across model-axis sizes, plus
+the single-device vmap_l2 baseline, and writes ``BENCH_pr4.json``.
+
+Faking runs every "device" on one CPU, so absolute rows/sec numbers are a
+correctness-path record of the schedule (like PR 3's interpret-mode pallas
+numbers), not a scaling measurement -- the mesh-shape sweep documents that
+every topology compiles and runs, and the JSON keeps per-shape timings for
+comparison against real multi-device runs.
+
+The measurement runs in a SUBPROCESS: only subprocesses fake device counts
+(dry-run rule), the orchestrating benchmark process keeps its real device.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import emit
+
+MODEL_SIZES = (1, 2, 4, 8)
+NS = (64, 96)          # 96 = ragged on every model size but 1 with csize 8
+QUICK_NS = (32,)
+
+_WORKER = """
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count={devices} "
+    + os.environ.get("XLA_FLAGS", ""))
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from repro import engine
+from repro.core import testfns
+from repro.compat import make_mesh
+
+model_sizes = {model_sizes}
+ns = {ns}
+csize = {csize}
+records = []
+rng = np.random.RandomState(0)
+for n in ns:
+    f = testfns.FUNCTIONS["rosenbrock"](n)
+    a = jnp.asarray(rng.uniform(-2, 2, (n,)), jnp.float32)
+    v = jnp.asarray(rng.randn(n), jnp.float32)
+    for size in model_sizes:
+        for sym in (False, True):
+            if size == 1:
+                p = engine.plan(f, n, csize=csize, symmetric=sym)
+                backend = p.backend_for("hvp")
+            else:
+                mesh = make_mesh(({devices} // size, size),
+                                 ("data", "model"))
+                p = engine.plan(f, n, csize=csize, mesh=mesh,
+                                symmetric=sym)
+                backend = p.backend_for("hvp")
+                assert backend == "sharded_rows", backend
+            jax.block_until_ready(p.hvp(a, v))      # compile + warmup
+            times = []
+            for _ in range(3):
+                t0 = time.perf_counter()
+                jax.block_until_ready(p.hvp(a, v))
+                times.append(time.perf_counter() - t0)
+            t = sorted(times)[len(times) // 2]
+            records.append({{
+                "n": n, "csize": csize, "model_axis_size": size,
+                "symmetric": sym, "backend": backend,
+                "mesh_shape": ("1 device" if size == 1 else
+                               str({devices} // size) + "x" + str(size)),
+                "hvp_s": round(t, 6),
+                "rows_per_sec": round(n / t, 1),
+            }})
+print("BENCH_JSON " + json.dumps(records))
+"""
+
+
+def run(ns=NS, model_sizes=MODEL_SIZES, csize=8, devices=8, out_path=None):
+    prog = _WORKER.format(devices=devices,
+                          model_sizes=repr(tuple(model_sizes)),
+                          ns=repr(tuple(ns)), csize=csize)
+    env = dict(os.environ)
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(prog)],
+                         env=env, capture_output=True, text=True,
+                         timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"distributed bench worker failed:\n{out.stdout}\n{out.stderr}")
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("BENCH_JSON ")][-1]
+    records = json.loads(line[len("BENCH_JSON "):])
+
+    for rec in records:
+        emit(f"distributed/rosenbrock/n{rec['n']}"
+             f"/model{rec['model_axis_size']}"
+             f"/{'sym' if rec['symmetric'] else 'full'}/rows_per_sec",
+             rec["rows_per_sec"],
+             f"backend={rec['backend']}, {rec['hvp_s'] * 1e3:.2f} ms "
+             "(fake devices: correctness-path timing)")
+
+    payload = {
+        "bench": "distributed_rows",
+        "devices": devices,
+        "note": ("fake host devices share one CPU; rows/sec documents the "
+                 "schedule across mesh shapes, not real scaling"),
+        "records": records,
+    }
+    path = out_path or os.environ.get("BENCH_PR4_OUT", "BENCH_pr4.json")
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    emit("distributed/bench_json", path, f"{len(records)} records")
+
+
+def main(quick: bool = False):
+    if quick:
+        run(ns=QUICK_NS, model_sizes=(1, 2, 4), csize=4)
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,18 @@ installs expose ``jax.experimental.shard_map`` with ``check_rep`` and a
 keyword set and translate to whatever the installed JAX understands, so
 every call site (distributed CHESSFAD, MoE, pipeline, train steps, tests)
 has ONE place that knows about the renames.
+
+The shard_map shim is gated on the PARSED jax version, not
+try/except-at-import: the version thresholds below say exactly when each
+rename happened, and on a jax that already speaks the modern names the
+shim is a pure passthrough (asserted by tests/test_compat.py) -- dropping
+it when the container jax moves past 0.8 is deleting the ``else``
+branches, not untangling exception flow.
+
+  >= 0.6.0 : ``shard_map`` is public at ``jax.shard_map``
+             (older: ``jax.experimental.shard_map.shard_map``)
+  >= 0.7.0 : the replication-check keyword is ``check_vma``
+             (older: ``check_rep``)
 """
 
 from __future__ import annotations
@@ -15,20 +27,37 @@ import inspect
 
 import jax
 
-try:
-    from jax import shard_map as _shard_map  # jax >= 0.8
-except ImportError:  # pragma: no cover - older jax
+__all__ = ["shard_map", "make_mesh", "auto_axis_types", "jax_version",
+           "SHARD_MAP_IS_PUBLIC", "REP_CHECK_KW"]
+
+
+def jax_version(version: str | None = None) -> tuple:
+    """The installed jax version as a comparable (major, minor, patch)
+    tuple; dev/rc suffixes are ignored."""
+    parts = []
+    for p in (version or jax.__version__).split(".")[:3]:
+        digits = ""
+        for ch in p:
+            if not ch.isdigit():
+                break
+            digits += ch
+        parts.append(int(digits or 0))
+    while len(parts) < 3:
+        parts.append(0)
+    return tuple(parts)
+
+
+_JAX = jax_version()
+
+# version gates (see module docstring); SHARD_MAP_IS_PUBLIC / REP_CHECK_KW
+# are exported so tests can assert the shim picked the right branch
+SHARD_MAP_IS_PUBLIC = _JAX >= (0, 6, 0)
+REP_CHECK_KW = "check_vma" if _JAX >= (0, 7, 0) else "check_rep"
+
+if SHARD_MAP_IS_PUBLIC:
+    _shard_map = jax.shard_map
+else:
     from jax.experimental.shard_map import shard_map as _shard_map
-
-_PARAMS = inspect.signature(_shard_map).parameters
-if "check_vma" in _PARAMS:
-    _REP_KW = "check_vma"
-elif "check_rep" in _PARAMS:
-    _REP_KW = "check_rep"
-else:  # pragma: no cover - keyword dropped entirely
-    _REP_KW = None
-
-__all__ = ["shard_map", "make_mesh", "auto_axis_types"]
 
 _MAKE_MESH_PARAMS = inspect.signature(jax.make_mesh).parameters
 
@@ -58,9 +87,14 @@ def make_mesh(axis_shapes, axis_names, **kw):
 def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=True, **kw):
     """Drop-in for jax's shard_map, tolerant of the check_vma/check_rep
     rename (same default, True, as stock jax).  Usable directly or via
-    functools.partial as a decorator."""
-    if _REP_KW is not None and _REP_KW not in kw:
-        kw[_REP_KW] = check_vma
+    functools.partial as a decorator.
+
+    On jax >= 0.7 this forwards ``check_vma`` under its own name -- a
+    no-op passthrough; on older versions the value travels as
+    ``check_rep``.  An explicit ``check_rep``/``check_vma`` in ``kw``
+    wins over the ``check_vma`` parameter."""
+    if REP_CHECK_KW not in kw:
+        kw[REP_CHECK_KW] = check_vma
     if f is None:
         return lambda fn: _shard_map(fn, mesh=mesh, in_specs=in_specs,
                                      out_specs=out_specs, **kw)

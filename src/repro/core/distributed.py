@@ -7,9 +7,27 @@ The paper's GPU grid maps onto the TPU mesh as:
   L2 (chunks)     -> in-lane vector axis        (csize <= 128 per shard)
 
 ``distributed_batched_hvp`` is the production entry point used by the
-batched-HVP serving example; it shards the instance batch over the data axes
-and optionally splits Hessian rows over the model axis, reducing per-row
-partials with a psum only when symmetric mirroring crosses shards.
+batched-HVP serving example; it shards the instance batch over the data
+axes.  ``distributed_hvp_rows`` / ``distributed_hessian_rows`` are the L1
+row-sharded schedules behind the engine's ``sharded_rows`` backend: a
+*single* large-n HVP or dense Hessian with its row blocks split over the
+model axis.  Both serve ragged n (the tail rows/chunks are masked
+in-shard, mirroring kernel v2's in-kernel masks) and the Alg. 8 symmetric
+schedule (below-diagonal chunk cells masked from the direct dot,
+strictly-upper cells mirrored H[i,j]*v[i] -> r[j]); symmetric mirroring
+crosses row shards, so that path reduces full-length per-shard partials
+with a single psum, while the full schedule needs no collective beyond the
+assembling all_gather.
+
+Symmetric here is a PARITY option (same results as kernel v2's Alg. 8
+path), not a work saving: the shard's row offset is a traced value in the
+SPMD program, so below-diagonal cells are evaluated-and-masked, not
+skipped -- a static cell grid must be nchunk wide because shard 0 owns
+row 0, which needs every chunk.  Under block row distribution the
+symmetric triangle is also maximally imbalanced (shard 0 holds the
+longest rows), so even dynamic trip counts would not shorten the critical
+path.  Prefer symmetric=False for sharded_rows wall-clock; real symmetric
+savings need a cyclic row layout plus kernel-level predication (ROADMAP).
 """
 
 from __future__ import annotations
@@ -18,13 +36,15 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 
 from .api import batched_hvp_impl
 
-__all__ = ["distributed_batched_hvp", "distributed_hvp_rows"]
+__all__ = ["distributed_batched_hvp", "distributed_hvp_rows",
+           "distributed_hessian_rows", "rows_per_shard"]
 
 
 def distributed_batched_hvp(mesh: Mesh, f, A, V, csize: int = 8,
@@ -49,40 +69,140 @@ def distributed_batched_hvp(mesh: Mesh, f, A, V, csize: int = 8,
     return run(A, V)
 
 
+def rows_per_shard(n: int, size: int) -> int:
+    """Row-block height per model shard: ceil(n / size); the last shard's
+    tail rows beyond n are dead (masked in-shard)."""
+    return -(-int(n) // int(size))
+
+
+def _cell_grid(n: int, csize: int, rows_per: int, row0):
+    """Static (rows_per * nchunk) cell enumeration for one shard's row
+    block, offset by the shard's (traced) first row.
+
+    Returns (ks, rows_c, starts, cols, cols_c, valid) where ``ks`` is the
+    block-local row of each cell and ``rows_c`` / ``cols_c`` are clamped
+    into range so dead tail cells evaluate somewhere legal while ``valid``
+    masks their contributions to zero.
+    """
+    nchunk = -(-n // csize)
+    ks = jnp.repeat(jnp.arange(rows_per), nchunk)              # (P,)
+    starts = jnp.tile(jnp.asarray(
+        np.arange(nchunk, dtype=np.int32) * csize), rows_per)  # (P,)
+    gis = row0 + ks
+    rows_c = jnp.minimum(gis, n - 1)
+    cols = starts[:, None] + jnp.arange(csize)[None, :]        # (P, csize)
+    valid = (cols < n) & (gis < n)[:, None]
+    cols_c = jnp.minimum(cols, n - 1)
+    return ks, rows_c, starts, cols, cols_c, valid
+
+
 def distributed_hvp_rows(mesh: Mesh, f, a, v, csize: int = 8,
-                         model_axis: str = "model"):
+                         model_axis: str = "model",
+                         symmetric: bool = False):
     """L1 sharding of a *single* HVP: Hessian rows split over the model axis.
 
-    Each shard computes the full non-symmetric chunk sweep for its row block
-    (rows are independent -- no collective needed for r[i]); the final result
-    is assembled with an all_gather. n must be divisible by the axis size.
+    Each shard sweeps the chunks of its ceil(n/size)-row block (rows are
+    independent -- no collective is needed for a row's own r[i]); ragged
+    row/chunk tails are masked in-shard, so any (n, csize, axis size)
+    combination is served.  With ``symmetric=True`` the Alg. 8 schedule
+    runs: below-diagonal chunk cells are masked from the direct dot
+    (evaluated-and-masked, not skipped -- see the module docstring) and
+    each strictly-upper element H[i,j] also contributes H[i,j]*v[i] to
+    r[j] -- a cross-shard write, so the symmetric path psums full-length
+    per-shard partials; the full schedule assembles row blocks with an
+    all_gather (``out_specs=P(model_axis)``) instead.
     """
+    a = jnp.asarray(a)
+    v = jnp.asarray(v)
     n = a.shape[-1]
     size = mesh.shape[model_axis]
-    assert n % size == 0, (n, size)
-    rows_per = n // size
+    rows_per = rows_per_shard(n, size)
 
-    @partial(shard_map, mesh=mesh, in_specs=(P(), P()),
-             out_specs=P(model_axis), check_vma=False)
-    def run(a_rep, v_rep):
-        shard = jax.lax.axis_index(model_axis)
-        row0 = shard * rows_per
+    def cell(a_rep, i, cstart):
+        from .api import eval_chunk
+        return eval_chunk(f, a_rep, i, cstart, csize).dij      # (csize,)
 
-        def one_row(k):
-            i = row0 + k
-            # non-symmetric row sweep: all chunks of row i
-            nchunk = -(-n // csize)
-            starts = jnp.arange(nchunk) * csize
+    if not symmetric:
+        @partial(shard_map, mesh=mesh, in_specs=(P(), P()),
+                 out_specs=P(model_axis), check_vma=False)
+        def run(a_rep, v_rep):
+            row0 = jax.lax.axis_index(model_axis) * rows_per
+            ks, rows_c, starts, _cols, cols_c, valid = _cell_grid(
+                n, csize, rows_per, row0)
+            chunks = jax.vmap(lambda i, c: cell(a_rep, i, c))(rows_c, starts)
+            contrib = jnp.where(valid, chunks * v_rep[cols_c], 0.0)
+            r_blk = jnp.zeros((rows_per,), a_rep.dtype)
+            return r_blk.at[ks].add(contrib.sum(-1))
 
-            def chunk_dot(cstart):
-                from .api import eval_chunk
-                dij = eval_chunk(f, a_rep, i, cstart, csize).dij
-                cols = cstart + jnp.arange(csize)
-                ok = cols < n
-                return jnp.sum(jnp.where(ok, dij * v_rep[jnp.minimum(cols, n - 1)], 0.0))
+        return run(a, v)[:n]
 
-            return jax.vmap(chunk_dot)(starts).sum()
+    @partial(shard_map, mesh=mesh, in_specs=(P(), P()), out_specs=P(),
+             check_vma=False)
+    def run_sym(a_rep, v_rep):
+        row0 = jax.lax.axis_index(model_axis) * rows_per
+        _ks, rows_c, starts, cols, cols_c, valid = _cell_grid(
+            n, csize, rows_per, row0)
+        chunks = jax.vmap(lambda i, c: cell(a_rep, i, c))(rows_c, starts)
+        block = (rows_c // csize)[:, None]
+        at_or_right = (cols // csize) >= block
+        direct = jnp.where(valid & at_or_right, chunks * v_rep[cols_c], 0.0)
+        r = jnp.zeros((n,), a_rep.dtype).at[rows_c].add(direct.sum(-1))
+        upper = ((cols // csize) > block) & valid
+        mirror = jnp.where(upper, chunks * v_rep[rows_c][:, None], 0.0)
+        r = r.at[cols_c.reshape(-1)].add(mirror.reshape(-1))
+        return jax.lax.psum(r, model_axis)
 
-        return jax.vmap(one_row)(jnp.arange(rows_per))
+    return run_sym(a, v)
 
-    return run(a, v)
+
+def distributed_hessian_rows(mesh: Mesh, f, a, csize: int = 8,
+                             model_axis: str = "model",
+                             symmetric: bool = False):
+    """L1 sharding of a *single* dense Hessian: each model shard fills its
+    ceil(n/size)-row block of H.
+
+    The full schedule stacks the per-shard (rows_per, n) blocks with an
+    all_gather; the symmetric schedule evaluates only at-or-right-of-
+    diagonal chunk cells per row, mirrors the strictly-upper region into
+    H[j, i] (cross-shard), and psums full (n, n) per-shard partials.
+    """
+    a = jnp.asarray(a)
+    n = a.shape[-1]
+    size = mesh.shape[model_axis]
+    rows_per = rows_per_shard(n, size)
+
+    def cell(a_rep, i, cstart):
+        from .api import eval_chunk
+        return eval_chunk(f, a_rep, i, cstart, csize).dij
+
+    if not symmetric:
+        @partial(shard_map, mesh=mesh, in_specs=(P(),),
+                 out_specs=P(model_axis), check_vma=False)
+        def run(a_rep):
+            row0 = jax.lax.axis_index(model_axis) * rows_per
+            ks, rows_c, starts, _cols, cols_c, valid = _cell_grid(
+                n, csize, rows_per, row0)
+            chunks = jax.vmap(lambda i, c: cell(a_rep, i, c))(rows_c, starts)
+            blk = jnp.zeros((rows_per, n), a_rep.dtype)
+            kk = jnp.broadcast_to(ks[:, None], cols_c.shape)
+            return blk.at[kk, cols_c].add(jnp.where(valid, chunks, 0.0))
+
+        return run(a)[:n]
+
+    @partial(shard_map, mesh=mesh, in_specs=(P(),), out_specs=P(),
+             check_vma=False)
+    def run_sym(a_rep):
+        row0 = jax.lax.axis_index(model_axis) * rows_per
+        _ks, rows_c, starts, cols, cols_c, valid = _cell_grid(
+            n, csize, rows_per, row0)
+        chunks = jax.vmap(lambda i, c: cell(a_rep, i, c))(rows_c, starts)
+        block = (rows_c // csize)[:, None]
+        at_or_right = (cols // csize) >= block
+        rr = jnp.broadcast_to(rows_c[:, None], cols_c.shape)
+        H = jnp.zeros((n, n), a_rep.dtype)
+        H = H.at[rr, cols_c].add(jnp.where(valid & at_or_right, chunks, 0.0))
+        upper = ((cols // csize) > block) & valid
+        H = H.at[cols_c, rr].add(jnp.where(upper, chunks, 0.0))
+        return jax.lax.psum(H, model_axis)
+
+    return run_sym(a)

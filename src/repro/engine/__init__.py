@@ -19,13 +19,16 @@ Planning decisions:
             "autotune" -> joint (csize, backend, blk_m) microbenchmark,
             memoized in-process and persisted to disk (a warm store
             resolves with zero timed probes); or an explicit int.
-  backend : "auto" -> learned history first (the joint tuner's persisted
-            winner, then execution telemetry), then the registry pick
-            (mesh => sharded, else the L2 vmap schedule; Pallas auto-wins
-            on TPU); or any registered name -- reference | vmap_l0 |
-            vmap_l1 | vmap_l2 | pallas | sharded | pytree_fwdrev (also
-            serves the Hutchinson "diag" workload) | pytree_fwd
-            ("quadform").
+  backend : "auto" -> topology first (a mesh plan narrows to the
+            mesh-native backends: batched_hvp => sharded over the data
+            axes, hvp/hessian => sharded_rows over the model axis), then
+            learned history (the joint tuner's persisted winner, then
+            mesh-keyed execution telemetry with windowed+age decay), then
+            the registry priorities (the L2 vmap schedule; Pallas
+            auto-wins on TPU); or any registered name -- reference |
+            vmap_l0 | vmap_l1 | vmap_l2 | pallas | sharded | sharded_rows
+            | pytree_fwdrev (also serves the Hutchinson "diag" workload)
+            | pytree_fwd ("quadform").
 
 Executables are cached process-wide on (f, n, csize, symmetric, backend,
 mesh, workload, options): repeated plans with the same static signature

@@ -384,10 +384,13 @@ def _probe_m(m, probe_m: int = 32) -> int:
     return max(8, min(mm, probe_m * 4))
 
 
-def _telemetry_hint(fp: str, n: int, symmetric: bool, workload: str):
+def _telemetry_hint(fp: str, n: int, symmetric: bool, workload: str,
+                    mesh=None):
     """(backend, csize, blk_m) of the best live-traffic measurement for this
-    (f, n, symmetric, workload), or None.  Seeds the sweep order so a tight
-    deadline still probes the known-good configuration first."""
+    (f, n, symmetric, workload, mesh), or None.  Seeds the sweep order so a
+    tight deadline still probes the known-good configuration first.
+    Mesh-keyed like the resolve-time consult: flat history never reorders a
+    mesh sweep and vice versa."""
     from .registry import execution_stats
     best, best_us = None, float("inf")
     for rec in execution_stats():
@@ -398,7 +401,7 @@ def _telemetry_hint(fp: str, n: int, symmetric: bool, workload: str):
             sf, sn, sc, ssym, _sbk, smesh, _swl, sopts = sig
         except (TypeError, ValueError):
             continue
-        if sn != n or bool(ssym) != bool(symmetric) or smesh is not None:
+        if sn != n or bool(ssym) != bool(symmetric) or smesh != mesh:
             continue
         try:
             if function_fingerprint(sf) != fp:
@@ -425,13 +428,19 @@ def _combo_grid(fp: str, n: int, mm: int, symmetric: bool, backend: str,
     csizes = [argmin] + [c for c in csizes if c != argmin]
 
     if mesh is not None:
-        # never steal a mesh plan from the sharded backend: csize-only
-        # sweep through the plan-level "auto" resolution (PR 1 behavior)
+        # never steal a mesh plan from the mesh-native backends: csize-only
+        # sweep through the plan-level "auto" resolution, which is
+        # topology-aware (batched_hvp -> sharded, hvp/hessian ->
+        # sharded_rows); the winner is recorded mesh-keyed in the memo and
+        # never persisted
         backends = ["auto"]
     elif backend != "auto":
         backends = [backend]
     else:
         from .registry import list_backends
+        # requires_mesh backends (sharded, sharded_rows) are skipped: a
+        # flat sweep has no mesh to run them on, and a mesh-tuned winner
+        # must never be recorded under a flat key
         backends = [
             name for name, s in sorted(list_backends().items(),
                                        key=lambda kv: -kv[1].priority)
@@ -449,17 +458,19 @@ def _combo_grid(fp: str, n: int, mm: int, symmetric: bool, backend: str,
             for bm in (blk_ms if bk == "pallas" else [None]):
                 combos.append((bk, c, bm))
 
-    hint = _telemetry_hint(fp, n, symmetric, workload)
+    hint = _telemetry_hint(fp, n, symmetric, workload, mesh)
     if hint is not None:
         if hint in combos:
             combos.remove(hint)
             combos.insert(0, hint)
         else:
-            # recorded plans often carry no blk_m option: fall back to a
-            # (backend, csize) match so the known-good configuration still
-            # leads the sweep under a tight deadline
+            # recorded plans often carry no blk_m option, and mesh sweeps
+            # carry combos under backend "auto" while telemetry records
+            # the RESOLVED backend name -- fall back to a (backend, csize)
+            # match (csize alone for "auto" combos) so the known-good
+            # configuration still leads the sweep under a tight deadline
             for i, (bk, c, _bm) in enumerate(combos):
-                if bk == hint[0] and c == hint[1]:
+                if (bk == hint[0] or bk == "auto") and c == hint[1]:
                     combos.insert(0, combos.pop(i))
                     break
     return combos

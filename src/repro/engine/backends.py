@@ -92,3 +92,45 @@ register_backend(BackendSpec(
     name="sharded", make=_sharded_make, workloads=frozenset({"batched_hvp"}),
     priority=30, requires_mesh=True,
     doc="instances shard_map'd over the mesh data axes (L0 distribution)"))
+
+
+# ---------------------------------------------------------------------------
+# sharded_rows: L1 row sharding of a single HVP / Hessian over the model axis
+# ---------------------------------------------------------------------------
+
+def _sharded_rows_make(plan, workload):
+    from repro.core import distributed
+    mesh, f = plan.mesh, plan.f
+    axis = plan.opt("model_axis", "model")
+
+    if workload == "hvp":
+        def run(a, v):
+            return distributed.distributed_hvp_rows(
+                mesh, f, a, v, csize=plan.csize, model_axis=axis,
+                symmetric=plan.symmetric)
+        return run
+    if workload == "hessian":
+        def run_h(a):
+            return distributed.distributed_hessian_rows(
+                mesh, f, a, csize=plan.csize, model_axis=axis,
+                symmetric=plan.symmetric)
+        return run_h
+    raise KeyError(workload)
+
+
+def _sharded_rows_supports(plan, workload):
+    # row sharding distributes over ONE named model axis; a mesh without it
+    # (e.g. a pure data mesh) has no row axis to map L1 onto, so the plan
+    # falls through to the single-device backends.  Any n >= 1 is served:
+    # ragged row/chunk tails are masked in-shard (kernel v2 semantics).
+    mesh = plan.mesh
+    return mesh is not None and plan.opt("model_axis",
+                                         "model") in mesh.axis_names
+
+
+register_backend(BackendSpec(
+    name="sharded_rows", make=_sharded_rows_make,
+    workloads=frozenset({"hvp", "hessian"}),
+    priority=30, requires_mesh=True, supports=_sharded_rows_supports,
+    doc="Hessian rows of a single HVP/Hessian shard_map'd over the model "
+        "axis (L1 distribution; ragged + symmetric schedules)"))

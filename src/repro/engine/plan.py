@@ -140,9 +140,15 @@ class CurvaturePlan:
                 by ``plan()`` before construction)
     symmetric : exploit Hessian symmetry (paper Alg. 6/8 schedules)
     backend   : registry name or "auto" (resolved per workload)
-    mesh      : optional jax.sharding.Mesh for the sharded backend
+    mesh      : optional jax.sharding.Mesh; a mesh-carrying plan resolves
+                to the mesh-native backends first (batched_hvp -> sharded
+                over the data axes, hvp/hessian -> sharded_rows over the
+                model axis)
     options   : hashable (key, value) pairs of backend tunables
-                (blk_m, interpret, level, data_axes, n_probes, ...)
+                (blk_m, interpret, level, data_axes, model_axis,
+                n_probes, ...) -- ``model_axis`` names the mesh axis the
+                sharded_rows backend partitions Hessian rows over
+                (default "model")
     """
 
     f: Callable
@@ -304,10 +310,23 @@ def plan(f, n=None, m=None, csize="auto", backend="auto", symmetric=True,
 
     level : convenience alias for the paper's schedules -- "L0"/"L1"/"L2"
             selects the matching vmap backend when backend is "auto".
-    options / **extra_options : backend tunables, must be hashable.
+    options / **extra_options : backend tunables, must be hashable
+            (``model_axis`` selects the row-sharding mesh axis for the
+            sharded_rows backend).
     """
     opts = dict(options or {})
     opts.update(extra_options)
+    if backend != "auto":
+        # fail at PLAN time, not first execute: an unknown name is a typo
+        # and a mesh-requiring backend without a mesh can never run --
+        # surfacing either during the first hvp() call (possibly on a
+        # service thread) hides the call site that made the mistake
+        from .registry import get_backend
+        spec = get_backend(backend)
+        if spec.requires_mesh and mesh is None:
+            raise ValueError(
+                f"backend {backend!r} requires a mesh; pass mesh=... to "
+                "plan() (or use backend='auto' for single-device plans)")
     if level is not None:
         if level not in ("L0", "L1", "L2"):
             raise ValueError(f"unknown level {level!r}")

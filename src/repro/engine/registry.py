@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import collections
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -131,6 +132,14 @@ _TELEMETRY: collections.OrderedDict = collections.OrderedDict()
 _TELEMETRY_MAXKEYS = 512             # keys strong-reference f: LRU-bound
 _TELEMETRY_VERSION = 0               # bumps on mutation (consult memo)
 _TELEMETRY_LOCK = threading.Lock()
+# decay/expiry of the consult-path best (PR 4): one transient fast (or
+# slow) measurement must not pin backend="auto" forever, so the best a
+# signature advertises is the minimum over its most recent
+# _TELEMETRY_WINDOW samples, each inflated by 2**(age / halflife) --
+# sample-count rollover AND wall-clock age both un-pin a stale winner.
+_TELEMETRY_WINDOW = 64               # samples the consult best considers
+_TELEMETRY_HALFLIFE_S = 600.0        # age doubling period for old samples
+_TELEMETRY_DRIFT = 1.05              # upward best drift tolerated silently
 
 
 def clear_telemetry() -> None:
@@ -141,23 +150,33 @@ def clear_telemetry() -> None:
 
 
 def record_execution(signature, backend: str, workload: str, *,
-                     bucket: int, n_points: int, elapsed_s: float) -> None:
+                     bucket: int, n_points: int, elapsed_s: float,
+                     now: Optional[float] = None) -> None:
     """Record one executed bucket: ``n_points`` real points served by an
     executable padded to ``bucket`` rows in ``elapsed_s`` seconds.
 
     ``signature`` is the plan's executable cache key (hashable); us/point is
     charged to the REAL points, so padding waste shows up as a higher
     us/point at ragged sizes.  Thread-safe: the service dispatcher calls
-    this from its own thread."""
+    this from its own thread.
+
+    The consult-path best this feeds is NOT monotonic (PR 4): it is the
+    minimum over the entry's most recent ``_TELEMETRY_WINDOW`` samples,
+    each inflated by ``2 ** (age / _TELEMETRY_HALFLIFE_S)``.  A transient
+    outlier therefore un-pins once the observation window rolls past it
+    (or it ages out), instead of steering ``backend="auto"`` forever.
+    ``now`` injects a clock for deterministic tests."""
     global _TELEMETRY_VERSION
     if n_points <= 0:
         return
+    t = time.monotonic() if now is None else float(now)
     us_per_point = elapsed_s / n_points * 1e6
     with _TELEMETRY_LOCK:
         entry = _TELEMETRY.get(signature)
         if entry is None:
             entry = {"backend": backend, "workload": workload,
-                     "best_us": float("inf"), "by_bucket": {}}
+                     "best_us": float("inf"), "by_bucket": {},
+                     "recent": collections.deque(maxlen=_TELEMETRY_WINDOW)}
             _TELEMETRY[signature] = entry
             while len(_TELEMETRY) > _TELEMETRY_MAXKEYS:
                 _TELEMETRY.popitem(last=False)
@@ -166,12 +185,17 @@ def record_execution(signature, backend: str, workload: str, *,
         samples = entry["by_bucket"].setdefault(
             int(bucket), collections.deque(maxlen=_TELEMETRY_MAXSAMPLES))
         samples.append(float(us_per_point))
-        # the consult path reads only the monotonic best-ever; bumping the
-        # version ONLY on improvement keeps the _LEARNED_CACHE memo hot
-        # under steady-state serving (a non-improving sample cannot change
-        # any consult decision)
-        if us_per_point < entry["best_us"]:
-            entry["best_us"] = float(us_per_point)
+        entry["recent"].append((float(us_per_point), t))
+        best = min(us * 2.0 ** (max(0.0, t - ts) / _TELEMETRY_HALFLIFE_S)
+                   for us, ts in entry["recent"])
+        # bump the consult version on improvement or MATERIAL upward drift
+        # (window/age rollover), but swallow the continuous age creep a
+        # pinned old sample produces: bumping on every float change would
+        # invalidate the _LEARNED_CACHE memo each bucket and put a full
+        # telemetry scan back on the serving hot path (a 5% stale best
+        # cannot flip a steering decision that the next 5% step won't)
+        if best < entry["best_us"] or best > entry["best_us"] * _TELEMETRY_DRIFT:
+            entry["best_us"] = float(best)
             _TELEMETRY_VERSION += 1
 
 
@@ -199,14 +223,17 @@ def execution_stats() -> list[dict]:
 
 
 def _telemetry_best(plan, workload: str, names: dict, fp: str):
-    """The capable backend with the best recorded min us/point for this
-    exact (f, n, csize, symmetric, workload) signature, or None.
+    """The capable backend with the best recorded windowed us/point for
+    this exact (f, n, csize, symmetric, mesh, workload) signature, or None.
 
     Signatures are the plan cache keys the service reports; the function
     slot is matched by identity first, fingerprint second, so history
     recorded by another plan object for the same function still counts.
-    Decisions use the monotonic per-signature best-ever us/point (not the
-    sample rings), so they only change when a backend improves.
+    Decisions use the per-signature windowed+age-decayed best (see
+    ``record_execution``), so a stale outlier eventually un-pins.
+    History is MESH-KEYED: a signature only matches a plan with the same
+    mesh (None matches None), so single-device telemetry can never promote
+    a sharded pick for a mesh plan nor vice versa.
     Negative-priority backends (correctness-only paths -- interpret-mode
     pallas off-TPU) never steal auto resolution here, however good their
     recorded numbers look."""
@@ -226,7 +253,7 @@ def _telemetry_best(plan, workload: str, names: dict, fp: str):
         except (TypeError, ValueError):
             continue
         if (sn != plan.n or sc != plan.csize
-                or bool(ssym) != plan.symmetric or smesh is not None):
+                or bool(ssym) != plan.symmetric or smesh != plan.mesh):
             continue
         if sf is not plan.f:
             try:
@@ -251,8 +278,13 @@ def _learned_backend(plan, workload: str, candidates):
     """PR 3: what ``backend="auto"`` learned about this plan -- the joint
     autotuner's persisted winner first (exact csize match so a tuned
     record never steers a differently-chunked plan), then execution
-    telemetry -- before static priorities get a say."""
-    if plan.mesh is not None or plan.n is None:
+    telemetry -- before static priorities get a say.
+
+    Mesh plans consult too (PR 4), but the whole pipeline is mesh-keyed:
+    the tuner never records mesh winners (``lookup_tuned`` is None there),
+    telemetry only matches same-mesh signatures, and the memo key carries
+    the mesh -- so learned history can never leak across topologies."""
+    if plan.n is None:
         return None
     names = {s.name: s for s in candidates}
     # NB name-level imports: the package re-exports the autotune FUNCTION
@@ -264,7 +296,8 @@ def _learned_backend(plan, workload: str, candidates):
         fp = function_fingerprint(plan.f)
     except Exception:       # pragma: no cover - consult must never break
         return None
-    key = (fp, plan.n, plan.csize, plan.symmetric, plan.m, workload)
+    key = (fp, plan.n, plan.csize, plan.symmetric, plan.m, workload,
+           plan.mesh)
     versions = (tuned_version(), _TELEMETRY_VERSION)
     with _TELEMETRY_LOCK:
         hit = _LEARNED_CACHE.get(key)
@@ -292,12 +325,17 @@ def _learned_backend(plan, workload: str, candidates):
 def resolve_backend(plan, workload: str) -> BackendSpec:
     """Pick the backend for a (plan, workload) pair.
 
-    Explicit names are honored (error if incapable).  "auto" consults
-    learned history first -- the joint autotuner's persisted winner for
-    this (function, n, workload) signature, then live execution telemetry
-    -- and only then falls back to the highest-priority capable backend:
-    mesh-carrying plans prefer ``sharded``, pytree plans fall through to
-    the pytree backends."""
+    Explicit names are honored (error if incapable).  "auto" resolution is
+    topology-aware FIRST (PR 4): a mesh-carrying plan asked for
+    distribution, so when any mesh-native backend (``requires_mesh``) is
+    capable of the workload on this mesh, the candidate set narrows to
+    those before anything else gets a say -- ``batched_hvp`` resolves to
+    ``sharded``, ``hvp``/``hessian`` to ``sharded_rows`` on a model-axis
+    mesh; workloads with no mesh-native backend (or meshes lacking the
+    needed axis) fall through to the single-device backends.  Within the
+    candidate set, learned history is consulted (the joint autotuner's
+    persisted winner for flat plans, then mesh-keyed execution telemetry)
+    and only then static priorities decide."""
     _ensure_builtin_backends()
     if plan.backend != "auto":
         spec = get_backend(plan.backend)
@@ -311,6 +349,10 @@ def resolve_backend(plan, workload: str) -> BackendSpec:
         raise ValueError(
             f"no registered backend supports workload {workload!r} for "
             f"plan {plan.describe()}; registered: {sorted(_REGISTRY)}")
+    if plan.mesh is not None:
+        mesh_native = [s for s in candidates if s.requires_mesh]
+        if mesh_native:
+            candidates = mesh_native
     learned = _learned_backend(plan, workload, candidates)
     if learned is not None:
         return learned

@@ -82,6 +82,15 @@ def moe_block(x2d, params, cfg, mesh=None):
     # combine: gather back, weight by gate, scatter-add per token
     ybf = jnp.concatenate(
         [yb.reshape(E * C, d), jnp.zeros((1, d), yb.dtype)], 0)
+    # the gather below is data-dependent (slot) over an operand whose
+    # producer is (model, data)-sharded; letting GSPMD partition that
+    # gather returns wrong rows on jax 0.4.x CPU (the shard-local index
+    # masking is miscompiled -- outputs differed from the unsharded
+    # program by O(1), not rounding).  Replicating the combine operand
+    # first makes the resharding boundary an explicit all-gather -- the
+    # same wire GSPMD must move here anyway -- and restores exact
+    # equivalence with the mesh-free program.
+    ybf = constrain(ybf, mesh, None, None)
     contrib = ybf[slot] * gates.reshape(-1)[order][:, None].astype(yb.dtype)
     y = jnp.zeros((T, d), x2d.dtype).at[token_of].add(
         jnp.where(keep[:, None], contrib, 0.0))

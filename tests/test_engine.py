@@ -137,8 +137,126 @@ def test_mesh_plans_resolve_to_sharded():
     p = engine.plan(FN["rosenbrock"](N), N, m=M, csize=CSIZE, mesh=mesh,
                     symmetric=False)
     assert p.backend_for("batched_hvp") == "sharded"
-    # but non-batched workloads fall back to a capable backend
-    assert p.backend_for("hvp") != "sharded"
+    # a data-only mesh has no model axis for row sharding: non-batched
+    # workloads fall back to a capable single-device backend
+    assert p.backend_for("hvp") not in ("sharded", "sharded_rows")
+    assert p.backend_for("hessian") != "sharded_rows"
+
+
+def test_model_mesh_resolves_hvp_to_sharded_rows():
+    """A model-axis mesh routes the single-HVP and dense-Hessian workloads
+    to the L1 row-sharded backend; workloads with no mesh-native backend
+    still fall through to the flat ones."""
+    from repro.compat import make_mesh
+    from repro.core import ref
+    mesh = make_mesh((len(jax.devices()),), ("model",))
+    f = FN["rosenbrock"](N)
+    p = engine.plan(f, N, csize=CSIZE, mesh=mesh, symmetric=False)
+    assert p.backend_for("hvp") == "sharded_rows"
+    assert p.backend_for("hessian") == "sharded_rows"
+    assert p.backend_for("batched_hessian").startswith("vmap")
+    A, V = _data(N, 1, seed=11)
+    r = p.hvp(A[0], V[0])
+    want = ref.hvp_fwdfwd(f, A[0], V[0])
+    np.testing.assert_allclose(np.asarray(r), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # a mesh-less plan must never resolve to a mesh-native backend
+    p_flat = engine.plan(f, N, csize=CSIZE, symmetric=False)
+    for wl in ("hvp", "hessian", "batched_hvp", "batched_hessian"):
+        assert p_flat.backend_for(wl) not in ("sharded", "sharded_rows")
+
+
+def test_mesh_requiring_backend_without_mesh_fails_at_plan_time():
+    with pytest.raises(ValueError, match="requires a mesh"):
+        engine.plan(FN["rosenbrock"](N), N, csize=CSIZE,
+                    backend="sharded_rows")
+    with pytest.raises(ValueError, match="requires a mesh"):
+        engine.plan(FN["rosenbrock"](N), N, csize=CSIZE, backend="sharded")
+    with pytest.raises(KeyError):
+        engine.plan(FN["rosenbrock"](N), N, csize=CSIZE,
+                    backend="not_a_backend")
+
+
+# ---------------------------------------------------------------------------
+# telemetry: windowed + age-decayed consult best (PR 4)
+# ---------------------------------------------------------------------------
+
+def _fresh_g():
+    # a test-local closure: unique fingerprint, so the persisted autotune
+    # store / other tests' telemetry can never steer these assertions
+    def g(x):
+        return (x * x * 3.0 + x).sum(0)
+    return g
+
+
+def test_telemetry_transient_best_unpins_after_window():
+    """One freak-fast measurement pins backend='auto' only until the
+    observation window rolls past it."""
+    from repro.engine import registry
+    engine.clear_telemetry()
+    g = _fresh_g()
+    p = engine.plan(g, N, m=M, csize=CSIZE, symmetric=False)
+    assert p.backend_for("batched_hvp") == "vmap_l2"   # static default
+    sig_l0 = p.cache_key("batched_hvp", "vmap_l0")
+    sig_l2 = p.cache_key("batched_hvp", "vmap_l2")
+    engine.record_execution(sig_l2, "vmap_l2", "batched_hvp", bucket=M,
+                            n_points=M, elapsed_s=1e-3, now=0.0)
+    engine.record_execution(sig_l0, "vmap_l0", "batched_hvp", bucket=M,
+                            n_points=M, elapsed_s=1e-9, now=0.0)
+    assert p.backend_for("batched_hvp") == "vmap_l0"   # transient pins
+    # honest (slower) l0 traffic rolls the window past the outlier
+    for i in range(registry._TELEMETRY_WINDOW):
+        engine.record_execution(sig_l0, "vmap_l0", "batched_hvp", bucket=M,
+                                n_points=M, elapsed_s=5e-3,
+                                now=float(i + 1))
+    assert p.backend_for("batched_hvp") == "vmap_l2"   # un-pinned
+    engine.clear_telemetry()
+
+
+def test_telemetry_age_decay_unpins_stale_best():
+    """A stale fast sample decays by age even before the window rolls:
+    one new honest sample after ~10 halflives beats it."""
+    from repro.engine import registry
+    engine.clear_telemetry()
+    g = _fresh_g()
+    p = engine.plan(g, N, m=M, csize=CSIZE, symmetric=False)
+    sig_l0 = p.cache_key("batched_hvp", "vmap_l0")
+    sig_l2 = p.cache_key("batched_hvp", "vmap_l2")
+    engine.record_execution(sig_l0, "vmap_l0", "batched_hvp", bucket=M,
+                            n_points=M, elapsed_s=1e-6, now=0.0)
+    engine.record_execution(sig_l2, "vmap_l2", "batched_hvp", bucket=M,
+                            n_points=M, elapsed_s=1e-3, now=0.0)
+    assert p.backend_for("batched_hvp") == "vmap_l0"
+    late = 10.0 * registry._TELEMETRY_HALFLIFE_S
+    engine.record_execution(sig_l0, "vmap_l0", "batched_hvp", bucket=M,
+                            n_points=M, elapsed_s=5e-3, now=late)
+    engine.record_execution(sig_l2, "vmap_l2", "batched_hvp", bucket=M,
+                            n_points=M, elapsed_s=1e-3, now=late)
+    assert p.backend_for("batched_hvp") == "vmap_l2"
+    engine.clear_telemetry()
+
+
+def test_learned_history_is_mesh_keyed():
+    """Single-device telemetry can never promote a backend for a mesh plan
+    and mesh telemetry can never steer a flat plan (PR 4)."""
+    engine.clear_telemetry()
+    g = _fresh_g()
+    mesh = _host_mesh()
+    p_flat = engine.plan(g, N, m=M, csize=CSIZE, symmetric=False)
+    p_mesh = engine.plan(g, N, m=M, csize=CSIZE, symmetric=False, mesh=mesh)
+    # freak-fast FLAT record: pins the flat plan, mesh plan unaffected
+    sig = p_flat.cache_key("batched_hvp", "vmap_l0")
+    engine.record_execution(sig, "vmap_l0", "batched_hvp", bucket=M,
+                            n_points=M, elapsed_s=1e-9)
+    assert p_flat.backend_for("batched_hvp") == "vmap_l0"
+    assert p_mesh.backend_for("batched_hvp") == "sharded"
+    # freak-fast MESH record naming a flat backend: flat plan unmoved
+    engine.clear_telemetry()
+    sig_m = p_mesh.cache_key("batched_hvp", "vmap_l1")
+    engine.record_execution(sig_m, "vmap_l1", "batched_hvp", bucket=M,
+                            n_points=M, elapsed_s=1e-12)
+    assert p_flat.backend_for("batched_hvp") == "vmap_l2"
+    engine.clear_telemetry()
 
 
 def test_level_alias_maps_to_vmap_backends():

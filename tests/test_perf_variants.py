@@ -62,14 +62,14 @@ def test_moe_shard_map_falls_back_on_indivisible_experts():
     assert bool(jnp.isfinite(loss))
 
 
-@pytest.mark.xfail(
-    reason="pre-existing seed failure: shard_map-local MoE differs from "
-           "GSPMD sort dispatch by >1e-5 on jax 0.4.x (see ROADMAP open "
-           "items); keeps tier-1 -x green while it awaits an owner",
-    strict=False)
 def test_moe_shard_map_equivalence_fake_devices():
     """Exact output equality vs the GSPMD sort dispatch on a (4,2) mesh
-    (capacity_factor high enough that no tokens drop)."""
+    (capacity_factor high enough that no tokens drop).
+
+    Was a seed-era xfail blamed on top-k tie-breaking; the real root cause
+    was the GSPMD-partitioned combine gather in moe.py returning wrong
+    rows on jax 0.4.x CPU (the shard_map-local path was correct all
+    along) -- fixed by replicating the combine operand before the gather."""
     from tests.test_distributed import run_with_fake_devices
     run_with_fake_devices("""
         import dataclasses, jax, jax.numpy as jnp, numpy as np
