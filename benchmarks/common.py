@@ -2,11 +2,13 @@
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 
-__all__ = ["time_fn", "emit"]
+__all__ = ["time_fn", "emit", "update_bench_json"]
 
 
 def time_fn(fn, *args, warmup: int = 1, reps: int = 3) -> float:
@@ -25,3 +27,25 @@ def time_fn(fn, *args, warmup: int = 1, reps: int = 3) -> float:
 def emit(name: str, value, derived: str = ""):
     """One CSV record: name,value,derived -- consumed by EXPERIMENTS.md."""
     print(f"{name},{value},{derived}")
+
+
+def update_bench_json(path: str, section: str, payload, env_var: str = ""):
+    """Merge ``payload`` under ``section`` into a shared JSON artifact.
+
+    BENCH_pr6.json has two writers (kernel_bench and distributed_bench run
+    as separate suites, possibly in either order), so each does a
+    read-modify-write of its own section instead of clobbering the file."""
+    if env_var:
+        path = os.environ.get(env_var, path)
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as fh:
+                data = json.load(fh)
+        except (OSError, ValueError):
+            data = {}
+    data[section] = payload
+    with open(path, "w") as fh:
+        json.dump(data, fh, indent=2)
+        fh.write("\n")
+    return path

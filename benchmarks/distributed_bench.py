@@ -82,6 +82,116 @@ print("BENCH_JSON " + json.dumps(records))
 """
 
 
+# PR 6: symmetric wall clock on the row-sharded backend -- the compacted
+# cyclic layout vs the masked block layout vs the full schedule.  Fake
+# devices serialize on one CPU, which makes them an honest TOTAL-WORK clock:
+# the masked block layout executes the full grid's cells even when half are
+# predicated away, so skipping shows up directly.
+_WORKER_PR6 = """
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count={devices} "
+    + os.environ.get("XLA_FLAGS", ""))
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from repro import engine
+from repro.core import testfns
+from repro.core.api import num_chunk_evals
+from repro.core.distributed import cyclic_layout, rows_per_shard
+from repro.compat import make_mesh
+
+ns = {ns}
+csize = {csize}
+size = {size}
+mesh = make_mesh(({devices} // size, size), ("data", "model"))
+records = []
+rng = np.random.RandomState(0)
+
+def clock(p, a, v):
+    jax.block_until_ready(p.hvp(a, v))
+    ts = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        jax.block_until_ready(p.hvp(a, v))
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+for n in ns:
+    f = testfns.FUNCTIONS["rosenbrock"](n)
+    a = jnp.asarray(rng.uniform(-2, 2, (n,)), jnp.float32)
+    v = jnp.asarray(rng.randn(n), jnp.float32)
+    variants = {{
+        "full": dict(symmetric=False),
+        "sym_block": dict(symmetric=True, row_layout="block"),
+        "sym_cyclic": dict(symmetric=True, row_layout="cyclic"),
+    }}
+    times = {{}}
+    for label, kw in variants.items():
+        p = engine.plan(f, n, csize=csize, mesh=mesh, **kw)
+        assert p.backend_for("hvp") == "sharded_rows"
+        times[label] = clock(p, a, v)
+    lay = cyclic_layout(n, csize, size)
+    grid_cells = size * rows_per_shard(n, size) * (-(-n // csize))
+    records.append({{
+        "n": n, "csize": csize, "model_axis_size": size,
+        "hvp_s": {{k: round(t, 6) for k, t in times.items()}},
+        "cells": {{"full": num_chunk_evals(n, csize, False),
+                   "sym_block_executed": grid_cells,
+                   "sym_cyclic_executed": size * lay.executed,
+                   "sym_kept": num_chunk_evals(n, csize, True)}},
+        "sym_cyclic_speedup_vs_full":
+            round(times["full"] / times["sym_cyclic"], 3),
+        "cyclic_speedup_vs_block":
+            round(times["sym_block"] / times["sym_cyclic"], 3),
+    }})
+print("BENCH_JSON " + json.dumps(records))
+"""
+
+
+def _run_worker(prog: str) -> list:
+    env = dict(os.environ)
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(prog)],
+                         env=env, capture_output=True, text=True,
+                         timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"distributed bench worker failed:\n{out.stdout}\n{out.stderr}")
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("BENCH_JSON ")][-1]
+    return json.loads(line[len("BENCH_JSON "):])
+
+
+def run_pr6(quick: bool = False, devices: int = 8, size: int = 4):
+    """Symmetric wall-clock sweep for sharded_rows, merged into the
+    "distributed" section of BENCH_pr6.json."""
+    from benchmarks.common import update_bench_json
+    ns = (32,) if quick else (48, 64)
+    records = _run_worker(_WORKER_PR6.format(
+        devices=devices, size=size, ns=repr(tuple(ns)), csize=4))
+    for rec in records:
+        emit(f"distributed/pr6_wallclock/n{rec['n']}",
+             f"{rec['sym_cyclic_speedup_vs_full']}x vs full",
+             f"cyclic-vs-block {rec['cyclic_speedup_vs_block']}x; cells "
+             f"{rec['cells']['full']} -> {rec['cells']['sym_cyclic_executed']}"
+             f" executed / {rec['cells']['sym_kept']} kept "
+             "(fake devices: total-work timing)")
+    payload = {
+        "note": ("fake host devices serialize on one CPU, so wall clock "
+                 "tracks TOTAL executed cells: the masked block layout "
+                 "pays for the dropped triangle, the cyclic layout skips "
+                 "it"),
+        "model_axis_size": size,
+        "records": records,
+    }
+    path = update_bench_json("BENCH_pr6.json", "distributed", payload,
+                             env_var="BENCH_PR6_OUT")
+    emit("distributed/pr6_bench_json", path, f"{len(records)} records")
+    return records
+
+
 def run(ns=NS, model_sizes=MODEL_SIZES, csize=8, devices=8, out_path=None):
     prog = _WORKER.format(devices=devices,
                           model_sizes=repr(tuple(model_sizes)),
@@ -127,6 +237,7 @@ def main(quick: bool = False):
         run(ns=QUICK_NS, model_sizes=(1, 2, 4), csize=4)
     else:
         run()
+    run_pr6(quick=quick)
 
 
 if __name__ == "__main__":

@@ -169,6 +169,70 @@ def run_symmetric_vs_full(quick):
     return out
 
 
+def run_pr6_symmetric_wallclock(quick):
+    """PR 6 acceptance artifact: symmetric-vs-full WALL CLOCK (not just
+    sweep counts) per backend across an n sweep, written to the "kernel"
+    section of ``BENCH_pr6.json``.
+
+    The compacted kernel v3 grid and the vmap_l2 cell enumeration execute
+    exactly the kept triangle, so the speedup tracks the sweep ratio
+    ~2*nchunk/(nchunk+1); the bench asserts the acceptance bar -- >= 1.4x
+    at the largest benchmarked n on at least one backend -- so a schedule
+    regression (e.g. reintroducing predicated ghost cells) fails the job
+    in wall clock, not only in the roofline cell gate."""
+    from benchmarks.common import update_bench_json
+    from repro.core.api import num_chunk_evals
+    from repro.kernels.chess_hvp import kernel_grid
+
+    shapes = {
+        "vmap_l2": [(16, 24, 4), (16, 32, 4)] if quick else
+                   [(32, 24, 4), (32, 48, 4), (32, 64, 8)],
+        # interpret-mode pallas: small cell, parity-path wall clock off-TPU
+        "pallas": [(8, 8, 4)] if quick else [(16, 12, 4)],
+    }
+    blk_m = 8
+    records = []
+    for backend, shape_list in shapes.items():
+        for m, n, csize in shape_list:
+            f = testfns.FUNCTIONS["rosenbrock"](n)
+            A, V = _data(m, n, seed=n)
+            times, cells = {}, {}
+            for sym in (False, True):
+                p = engine.plan(f, n, m=m, csize=csize, backend=backend,
+                                symmetric=sym, blk_m=blk_m)
+                key = "sym" if sym else "full"
+                times[key] = time_fn(p.batched_hvp, A, V, reps=5) / m * 1e6
+                cells[key] = (kernel_grid(m, n, csize, blk_m, sym)[1]
+                              if backend == "pallas" else
+                              num_chunk_evals(n, csize, sym))
+            speedup = times["full"] / times["sym"]
+            emit(f"kernel/pr6_wallclock/{backend}/n{n}", f"{speedup:.2f}x",
+                 f"csize={csize}; cells {cells['full']} -> {cells['sym']}; "
+                 f"full {times['full']:.1f} -> sym {times['sym']:.1f} us/pt")
+            records.append({
+                "backend": backend, "m": m, "n": n, "csize": csize,
+                "cells": cells,
+                "us_per_point": {k: round(v, 3) for k, v in times.items()},
+                "sym_speedup": round(speedup, 3)})
+    # acceptance: >= 1.4x at the largest benchmarked n on >= 1 backend
+    best_at_largest = {}
+    for r in records:
+        b = r["backend"]
+        if b not in best_at_largest or r["n"] > best_at_largest[b]["n"]:
+            best_at_largest[b] = r
+    top = max(best_at_largest.values(), key=lambda r: r["sym_speedup"])
+    assert top["sym_speedup"] >= 1.4, best_at_largest
+    payload = {"records": records,
+               "largest_n_speedups": {b: {"n": r["n"],
+                                          "sym_speedup": r["sym_speedup"]}
+                                      for b, r in best_at_largest.items()}}
+    path = update_bench_json("BENCH_pr6.json", "kernel", payload,
+                             env_var="BENCH_PR6_OUT")
+    emit("kernel/pr6_bench_json", path,
+         f"best largest-n speedup {top['sym_speedup']}x ({top['backend']})")
+    return records
+
+
 def run_ragged_vs_divisible(quick):
     """Before v2 the kernel only ran csize | n; at n=12 that capped chunks
     at csize=4.  Measure what the ragged tail unlocks: csize=8 (one ragged
@@ -209,6 +273,9 @@ def run(quick=False):
     t_pl = time_fn(p_pl.batched_hvp, A, V)
     emit("kernel/chess_hvp/pallas_interpret_us_per_point",
          f"{t_pl / m * 1e6:.2f}", "interpret=True (CPU correctness path)")
+
+    # -- PR 6: symmetric-vs-full wall clock, written to BENCH_pr6.json -----
+    run_pr6_symmetric_wallclock(quick)
 
     # -- PR 3: symmetric schedule, ragged tails, joint-tune regret ---------
     sym_records = run_symmetric_vs_full(quick)

@@ -102,18 +102,22 @@ def _sharded_rows_make(plan, workload):
     from repro.core import distributed
     mesh, f = plan.mesh, plan.f
     axis = plan.opt("model_axis", "model")
+    # "cyclic" (default) = PR 6 snake row-block deal with the below-diagonal
+    # triangle DROPPED from the per-shard cell enumeration; "block" keeps
+    # the PR 4 evaluated-and-masked contiguous layout as a parity baseline
+    layout = plan.opt("row_layout", "cyclic")
 
     if workload == "hvp":
         def run(a, v):
             return distributed.distributed_hvp_rows(
                 mesh, f, a, v, csize=plan.csize, model_axis=axis,
-                symmetric=plan.symmetric)
+                symmetric=plan.symmetric, row_layout=layout)
         return run
     if workload == "hessian":
         def run_h(a):
             return distributed.distributed_hessian_rows(
                 mesh, f, a, csize=plan.csize, model_axis=axis,
-                symmetric=plan.symmetric)
+                symmetric=plan.symmetric, row_layout=layout)
         return run_h
     raise KeyError(workload)
 

@@ -8,11 +8,18 @@ benchmarks share one source of truth):
   SCHUNK-HESS : (3/2) n (2n + 2c + n/c + 1) M  (convex, minimized at
                 c* = sqrt(n/2))
 
-``model_csize`` evaluates the relevant formula over the feasible candidate
-set (powers of two up to the first covering n, capped at the VPU lane
-width; ragged tails are masked by every schedule since kernel v2, so
-divisibility is not required) and returns the argmin -- a pure static
-decision, no tracing or timing.
+``model_csize`` minimizes the EXACT schedule cost (PR 6): the number of
+chunk-tangent sweeps the schedules actually execute -- ceil-div chunk
+grids, and for ``symmetric=True`` only the KEPT at-or-right-of-diagonal
+cells (``core.api.num_chunk_evals``, the same static enumeration the
+kernel/vmap/sharded schedules run) -- times the per-sweep hDual<c>
+multiply cost 6c+3.  The continuous §5 formulas above are its csize|n
+limit and stay exported for the opcount benchmark; the exact count is what
+makes the selector symmetric-aware at ragged n, where the continuous model
+over-charges partial chunks (e.g. n=12 symmetric picks c=2 exactly vs c=4
+continuously).  Candidates are powers of two up to the first covering n,
+capped at the VPU lane width; divisibility is not required since kernel v2
+masks ragged tails.  A pure static decision, no tracing or timing.
 ``count_jaxpr_ops`` stays as the empirical validator used by the opcount
 benchmark suite.
 """
@@ -26,9 +33,9 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
-    "mults_chunk_hess", "mults_schunk_hess", "csize_candidates",
-    "pruned_csize_candidates", "model_csize", "count_jaxpr_ops",
-    "LANE_WIDTH",
+    "mults_chunk_hess", "mults_schunk_hess", "exact_mults",
+    "csize_candidates", "pruned_csize_candidates", "model_csize",
+    "count_jaxpr_ops", "LANE_WIDTH",
 ]
 
 # TPU VPU lane width: the chunk axis vectorizes onto lanes, so csize beyond
@@ -44,6 +51,19 @@ def mults_chunk_hess(n, c, M):
 def mults_schunk_hess(n, c, M):
     """Scalar multiplies of SCHUNK-HESS (paper §5, symmetric)."""
     return 1.5 * n * (2 * n + 2 * c + n / c + 1) * M
+
+
+def exact_mults(n, c, symmetric, M: int = 1):
+    """EXACT per-multiply schedule cost: executed chunk-tangent sweeps
+    (``num_chunk_evals`` -- ceil-div grid; symmetric counts ONLY the kept
+    at-or-right-of-diagonal cells, matching the compacted kernel grid and
+    the cyclic sharded enumeration) times the hDual<c> multiply cost 6c+3.
+
+    Reduces to ``mults_chunk_hess`` / ``mults_schunk_hess`` when c | n;
+    at ragged n it charges partial chunks their true (full-sweep) price,
+    which the continuous formulas amortize away."""
+    from repro.core.api import num_chunk_evals
+    return num_chunk_evals(n, c, bool(symmetric)) * (6 * c + 3) * M
 
 
 def csize_candidates(n: int) -> list[int]:
@@ -74,9 +94,8 @@ def pruned_csize_candidates(n: int, symmetric: bool = False,
     keeps every plausible winner while cutting the sweep roughly in half at
     large n.  The model argmin itself is always kept."""
     cands = csize_candidates(n)
-    cost = mults_schunk_hess if symmetric else mults_chunk_hess
-    best = min(cost(n, c, 1) for c in cands)
-    keep = [c for c in cands if cost(n, c, 1) <= factor * best]
+    best = min(exact_mults(n, c, symmetric) for c in cands)
+    keep = [c for c in cands if exact_mults(n, c, symmetric) <= factor * best]
     argmin = model_csize(n, symmetric)
     if argmin not in keep:
         keep.append(argmin)
@@ -84,11 +103,16 @@ def pruned_csize_candidates(n: int, symmetric: bool = False,
 
 
 def model_csize(n: int, symmetric: bool = True) -> int:
-    """§5 scalar-multiply model argmin over the candidate set.
+    """Exact schedule-cost argmin over the candidate set (``exact_mults``).
 
-    symmetric=True  -> SCHUNK-HESS model, sharply convex and minimized
-                       near sqrt(n/2): exact argmin.
-    symmetric=False -> CHUNK-HESS model, (6 + 3/c) n^2: monotone but
+    symmetric=True  -> kept-triangle sweep count (SCHUNK-HESS limit),
+                       sharply convex and minimized near sqrt(n/2): exact
+                       argmin.  Counting only the kept cells is what keeps
+                       csize="auto" unbiased for symmetric plans -- the
+                       full-grid count would over-charge small chunks
+                       (their triangles are thinner) and push the argmin
+                       up.
+    symmetric=False -> full-grid count (CHUNK-HESS limit): monotone but
                        nearly flat past small c, while the hDual state
                        (2c+2 floats per value -- the paper's csize <->
                        fast-memory dial) keeps growing.  Return the
@@ -96,11 +120,11 @@ def model_csize(n: int, symmetric: bool = True) -> int:
                        rather than the degenerate largest chunk.
     """
     cands = csize_candidates(n)
-    cost = (mults_schunk_hess if symmetric else mults_chunk_hess)
-    best = min(cost(n, c, 1) for c in cands)
+    best = min(exact_mults(n, c, symmetric) for c in cands)
     if symmetric:
-        return min(cands, key=lambda c: (cost(n, c, 1), c))
-    return min(c for c in cands if cost(n, c, 1) <= 1.10 * best)
+        return min(cands, key=lambda c: (exact_mults(n, c, symmetric), c))
+    return min(c for c in cands
+               if exact_mults(n, c, symmetric) <= 1.10 * best)
 
 
 def count_jaxpr_ops(n, csize, n_mults):

@@ -342,3 +342,39 @@ def test_pytree_diag_workload():
     np.testing.assert_allclose(np.asarray(d["b"]),
                                np.asarray(12.0 * params["b"] ** 2),
                                rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# symmetric-aware exact op model (PR 6)
+# ---------------------------------------------------------------------------
+
+def test_model_csize_symmetric_aware_pins():
+    """Regression pins for the exact (ceil-div, kept-triangle) cost model:
+    at ragged-divisor n=12 the symmetric and full schedules pick DIFFERENT
+    chunks -- the continuous formulas agreed on 4 because they amortize
+    partial chunks the schedules actually pay for in full."""
+    from repro.engine.opmodel import (exact_mults, model_csize,
+                                      mults_chunk_hess, mults_schunk_hess,
+                                      pruned_csize_candidates)
+
+    assert model_csize(12, symmetric=True) == 2
+    assert model_csize(12, symmetric=False) == 4
+    # ragged n: exact counting charges c=4's half-empty third chunk
+    assert model_csize(10, symmetric=False) == 2
+    # the exact count reduces to the continuous §5 formulas when c | n
+    assert exact_mults(16, 4, False) == mults_chunk_hess(16, 4, 1)
+    assert exact_mults(16, 4, True) == mults_schunk_hess(16, 4, 1)
+    # the model argmin always survives candidate pruning
+    for n in (10, 12, 48):
+        for sym in (False, True):
+            assert model_csize(n, sym) in pruned_csize_candidates(n, sym)
+
+
+def test_plan_auto_csize_pins_sym_vs_full():
+    """csize="auto" plans inherit the symmetric-aware argmin: the same f/n
+    resolves to different chunk sizes for sym vs full schedules."""
+    f = FN["rosenbrock"](12)
+    p_sym = engine.plan(f, 12, csize="auto", symmetric=True)
+    p_full = engine.plan(f, 12, csize="auto", symmetric=False)
+    assert p_sym.csize == 2, p_sym.csize
+    assert p_full.csize == 4, p_full.csize

@@ -79,6 +79,54 @@ def test_symmetric_schedule_matches_vmap_l2(function):
                                atol=1e-5 * (1 + np.abs(want).max()))
 
 
+# ---------------------------------------------------------------------------
+# kernel v3: compacted symmetric grid -- sweep-count witness + parity (PR 6)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,csize", [(16, 4), (12, 4), (13, 4), (9, 2),
+                                     (8, 8), (6, 16)])
+def test_sweep_count_witness(n, csize):
+    """The launch grid's trailing extent IS the tangent-sweep count: the
+    compacted symmetric grid enumerates exactly the upper-triangle chunk
+    cells -- csize * nchunk * (nchunk+1) / 2 when csize | n -- with no
+    predicated ghost cells (v2 launched the full grid and masked)."""
+    from repro.core.api import chunk_pairs, num_chunk_evals
+    from repro.kernels.chess_hvp import kernel_grid
+
+    nchunk = -(-n // csize)
+    sym = kernel_grid(8, n, csize, 8, True)
+    full = kernel_grid(8, n, csize, 8, False)
+    assert full[1] == n * nchunk
+    assert sym[1] == num_chunk_evals(n, csize, True)
+    assert sym[1] == len(chunk_pairs(n, csize, True))
+    if n % csize == 0:
+        assert sym[1] == csize * nchunk * (nchunk + 1) // 2
+    if nchunk > 1:
+        assert sym[1] < full[1]
+    # every enumerated cell is at-or-right of its row's diagonal block
+    pairs = chunk_pairs(n, csize, True)
+    assert all(c >= (r // csize) * csize for r, c in pairs)
+
+
+@pytest.mark.parametrize("function",
+                         ["rosenbrock", "ackley", "fletcher_powell"])
+@pytest.mark.parametrize("n", [8, 10])
+@pytest.mark.parametrize("m,blk_m", [(1, 8), (12, 4)])
+def test_compacted_sym_parity_vs_oracle(function, n, m, blk_m):
+    """Compacted-grid symmetric parity against the fwd-fwd oracle on all
+    testfns x {divisible, ragged n} x {m=1, m > blk_m} (PR 6 satellite)."""
+    rng = np.random.RandomState(m * 7 + n)
+    A = jnp.asarray(rng.uniform(-2, 2, (m, n)), jnp.float32)
+    V = jnp.asarray(rng.randn(m, n), jnp.float32)
+    out = chess_hvp(A, V, function=function, csize=4, blk_m=blk_m,
+                    symmetric=True)
+    f, consts = _fn_and_consts(function, n)
+    want = chess_hvp_ref(f, A, V, 4, consts)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(want),
+        rtol=5e-3, atol=5e-3 * (1 + np.abs(np.asarray(want)).max()))
+
+
 def test_symmetric_vs_full_schedules_agree():
     """Both schedules compute the same HVP (the symmetric one touching
     roughly half the chunks)."""

@@ -93,6 +93,91 @@ def test_sharded_rows_hessian_parity():
     """)
 
 
+def test_cyclic_layout_balance_and_counts():
+    """Host-side invariants of the snake-cyclic symmetric schedule (no
+    devices needed): per-shard kept cells sum to exactly the upper
+    triangle (no masked ghosts), differ by at most one block's cells, and
+    the shard-major row permutation is a bijection its inverse undoes."""
+    import numpy as np
+
+    from repro.core.api import num_chunk_evals
+    from repro.core.distributed import cyclic_layout, snake_shard_of_block
+
+    for n, csize, size in [(16, 4, 4), (13, 4, 4), (48, 4, 4), (64, 8, 8),
+                           (9, 2, 4), (12, 4, 2), (7, 3, 8)]:
+        lay = cyclic_layout(n, csize, size)
+        assert sum(lay.kept) == num_chunk_evals(n, csize, True), (n, csize,
+                                                                  size)
+        assert max(lay.kept) - min(lay.kept) <= lay.block_cells_bound
+        assert lay.executed == max(lay.kept)
+        assert lay.valid.sum() == sum(lay.kept)
+        rs = lay.row_of_slot[lay.row_of_slot >= 0]
+        assert sorted(rs.tolist()) == list(range(n))
+        assert all(int(lay.row_of_slot[lay.slot_of_row[i]]) == i
+                   for i in range(n))
+        # every kept cell sits at-or-right of its row's diagonal block
+        cells = lay.cells[lay.valid]
+        assert np.all(cells[:, 1] >= (cells[:, 0] // csize) * csize)
+    # the snake deal covers every block exactly once
+    sh = snake_shard_of_block(10, 4)
+    assert sorted(np.bincount(sh, minlength=4).tolist()) == [2, 2, 3, 3]
+
+
+def test_cyclic_counter_and_block_layout_parity():
+    """The injectable cell counter witnesses the executed/kept accounting
+    in the live SPMD build, and the compacted cyclic outputs match the
+    evaluated-and-masked block layout bit-for-bit on the same mesh."""
+    run_with_fake_devices(HEADER + """
+    from repro.core import distributed
+    from repro.core.api import num_chunk_evals
+
+    f = testfns.rosenbrock
+    for n in (16, 13):
+        csize = 4
+        rng = np.random.RandomState(n)
+        a = jnp.asarray(rng.uniform(-2, 2, (n,)), jnp.float32)
+        v = jnp.asarray(rng.randn(n), jnp.float32)
+        seen = []
+        out = distributed.distributed_hvp_rows(
+            mesh, f, a, v, csize=csize, symmetric=True,
+            cell_counter=seen.append)
+        stats = seen[0]
+        assert stats["layout"] == "cyclic", stats
+        kept = stats["kept_per_shard"]
+        nchunk = -(-n // csize)
+        # no masked ghosts: kept cells are exactly the upper triangle,
+        # executed = the padded common trip count, balance within a block
+        assert sum(kept) == num_chunk_evals(n, csize, True), stats
+        assert max(kept) - min(kept) <= csize * nchunk, stats
+        assert stats["executed_per_shard"] == [max(kept)] * 4, stats
+        out_b = distributed.distributed_hvp_rows(
+            mesh, f, a, v, csize=csize, symmetric=True, row_layout="block")
+        assert float(jnp.abs(out - out_b).max()) <= 1e-5
+        H_c = distributed.distributed_hessian_rows(
+            mesh, f, a, csize=csize, symmetric=True)
+        H_b = distributed.distributed_hessian_rows(
+            mesh, f, a, csize=csize, symmetric=True, row_layout="block")
+        assert float(jnp.abs(H_c - H_b).max()) <= 1e-5
+        print("OK", n, kept)
+    print("COUNTER_OK")
+    """)
+
+
+def test_row_layout_plan_option():
+    """row_layout is a plan option: "block" keeps the masked baseline,
+    both layouts match the oracle through the engine."""
+    run_with_fake_devices(HEADER + """
+    f = testfns.rosenbrock
+    for layout in ("cyclic", "block"):
+        p = engine.plan(f, 13, csize=4, mesh=mesh, symmetric=True,
+                        row_layout=layout)
+        assert p.backend_for("hvp") == "sharded_rows"
+        check(p, f, 13, "hvp")
+        check(p, f, 13, "hessian")
+    print("LAYOUT_OPT_OK")
+    """)
+
+
 def test_sharded_rows_model_axis_option():
     """The row-partitioning axis is a plan option: a custom axis name
     routes through supports() and the executable still matches."""
