@@ -1,7 +1,17 @@
-"""SophiaH (CHESSFAD chunked-HVP curvature) vs AdamW on a small LM: the
-framework-level payoff of the paper's technique. Emits final losses and the
-per-step overhead of the curvature refresh; asserts SophiaH's loss is
-competitive (within 5%) at equal step counts."""
+"""Curvature-preconditioned optimization on real model structures: the
+framework-level payoff of the paper's technique, in two acts.
+
+Act 1 (the PR 3 comparison, kept as the hard gate): SophiaH (CHESSFAD
+chunked-HVP curvature) vs AdamW on a small dense LM -- asserts SophiaH's
+loss is competitive (within 5%) at equal step counts.
+
+Act 2 (PR 7): tiny-ified ZOO models through the pytree pipeline --
+  * Newton-CG over the raveled parameter vector (every CG iteration one
+    engine HVP) vs an AdamW baseline at equal loss-evaluation budgets;
+  * a per-layer Hessian-diagonal spectrum report feeding the
+    ``models.kv_quant`` quantization policy (which layers' KV caches drop
+    to int8).
+Results land in ``BENCH_pr7.json`` under section "optimizer"."""
 
 from __future__ import annotations
 
@@ -10,16 +20,25 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
-from repro.configs.base import ModelConfig
+from benchmarks.common import emit, update_bench_json
+from repro.configs.base import ModelConfig, get_config
+from repro.engine.pytree import spec_of
 from repro.models.model import make_batch
 from repro.models.params import init_params
+from repro.models.targets import diag_spectrum, lm_curvature_targets
+from repro.models.kv_quant import choose_kv_cache_dtype, kv_sensitivity
 from repro.optim import adamw, sophia_h
+from repro.optim.newton_cg import newton_cg
 from repro.optim.schedule import constant
 from repro.training import TrainState, make_train_step
 
+from repro import engine
+
 
 LR_GRID = (1e-3, 2e-3, 3e-3, 1e-2)
+
+ZOO_QUICK = ("qwen1.5-4b",)
+ZOO_FULL = ("qwen1.5-4b", "granite-moe-1b-a400m", "mamba2-2.7b")
 
 
 def _train(cfg, opt, steps):
@@ -73,10 +92,94 @@ def run(steps=60, hess_every=5):
     overhead = results["sophia_h"][1] / results["adamw"][1]
     emit("optimizer/sophia_step_overhead", f"{overhead:.2f}x",
          f"amortized chunked-HVP cost at hess_every={hess_every}")
+    return {"dense": {
+        "adamw_final": round(results["adamw"][0], 4),
+        "sophia_final": round(results["sophia_h"][0], 4),
+        "sophia_over_adamw": round(ratio, 4),
+        "sophia_step_overhead": round(overhead, 3)}}
+
+
+def _adam_drop(tgt, params, steps, lr=3e-3):
+    """AdamW on the raveled objective: loss drop after ``steps`` updates."""
+    opt = adamw(constant(lr), weight_decay=0.0)
+    ostate = opt.init(params)
+    grad = jax.jit(jax.value_and_grad(tgt.loss))
+    p = params
+    l0 = lfin = None
+    for i in range(steps):
+        lval, g = grad(p)
+        p, ostate, _ = opt.update(g, ostate, p, jnp.asarray(i))
+        if i == 0:
+            l0 = float(lval)
+    lfin = float(tgt.loss(p))
+    return l0, lfin
+
+
+def run_zoo(quick=True, max_outer=3, cg_iters=4):
+    """Newton-CG (engine HVPs over the raveled zoo params) vs AdamW, plus
+    the curvature->KV-quantization spectrum report."""
+    names = ZOO_QUICK if quick else ZOO_FULL
+    payload = {}
+    for name in names:
+        cfg = get_config(name, reduced=True)
+        batch = make_batch(cfg, 2, 16, jax.random.PRNGKey(11))
+        tgt = lm_curvature_targets(cfg, batch)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        spec = spec_of(params)
+
+        def f_flat(x, _spec=spec, _loss=tgt.loss):
+            return _loss(_spec.unravel(x))
+
+        x0 = jnp.asarray(spec.ravel(params))
+        x_opt, info = newton_cg(f_flat, x0, engine="fwdrev",
+                                max_outer=max_outer, cg_iters=cg_iters)
+        l0 = info["trajectory"][0]["f"]
+        l_newton = float(f_flat(x_opt))
+        newton_drop = (l0 - l_newton) / l0
+        assert newton_drop > 0, (name, info["trajectory"])
+
+        la0, la_fin = _adam_drop(tgt, params, steps=max_outer * cg_iters)
+        adam_drop = (la0 - la_fin) / la0
+
+        emit(f"optimizer/zoo/{name}/newton_cg_rel_drop",
+             f"{newton_drop:.4f}",
+             f"{max_outer} outer x {cg_iters} CG HVPs, loss "
+             f"{l0:.3f} -> {l_newton:.3f}")
+        emit(f"optimizer/zoo/{name}/adamw_rel_drop", f"{adam_drop:.4f}",
+             f"{max_outer * cg_iters} steps at matched grad budget")
+
+        # curvature spectrum -> per-layer KV cache dtype decisions
+        p_diag = engine.plan(tgt.loss, None, csize=2,
+                             backend="pytree_fwdrev",
+                             options={"n_probes": 2, **tgt.plan_options()})
+        spectrum = diag_spectrum(p_diag.diag(params, jax.random.PRNGKey(3)))
+        sens = kv_sensitivity(spectrum)
+        policy = choose_kv_cache_dtype(sens, int8_budget_frac=0.5)
+        n_int8 = list(policy.values()).count("int8")
+        if policy:
+            emit(f"optimizer/zoo/{name}/kv_int8_layers",
+                 f"{n_int8}/{len(policy)}",
+                 "lowest-curvature KV projections quantize first")
+        payload[name] = {
+            "loss0": round(l0, 4),
+            "newton_cg_final": round(l_newton, 4),
+            "newton_cg_rel_drop": round(newton_drop, 5),
+            "adamw_rel_drop": round(adam_drop, 5),
+            "newton_outer": info["iterations"],
+            "kv_policy": {str(k): v for k, v in policy.items()},
+            "kv_sensitivity": {str(k): float(f"{v:.6g}")
+                               for k, v in sens.items()},
+        }
+    return {"zoo_newton_cg": payload}
 
 
 def main(quick: bool = False):
-    run(steps=25 if quick else 60)
+    payload = run(steps=25 if quick else 60)
+    payload.update(run_zoo(quick=quick, max_outer=3 if quick else 5,
+                           cg_iters=4 if quick else 6))
+    path = update_bench_json("BENCH_pr7.json", "optimizer", payload,
+                             env_var="BENCH_PR7_OUT")
+    emit("optimizer/pr7_bench_json", path, "sections: dense, zoo_newton_cg")
 
 
 if __name__ == "__main__":

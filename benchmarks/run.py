@@ -23,6 +23,7 @@ SUITES = {
     "engine": "benchmarks.engine_bench",    # plan/execute csize selection
     "service": "benchmarks.service_bench",  # async coalescing throughput
     "distributed": "benchmarks.distributed_bench",  # L1 rows vs mesh shape
+    "zoo": "benchmarks.zoo_bench",          # pytree workloads on zoo configs
 }
 
 

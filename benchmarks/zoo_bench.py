@@ -1,0 +1,69 @@
+"""Model-zoo curvature microbenchmark: us/point for every pytree workload
+kind (hvp, diag, ggn, fisher) on tiny-ified zoo configs, through the same
+``engine.plan()`` path the conformance suite gates.
+
+This is the PR 7 perf artifact: ``BENCH_pr7.json`` section "zoo" records
+per-(config, workload) wall clock so regressions in the pytree_fwdrev
+paths (e.g. an accidental per-call retrace) show up as a wall-clock cliff,
+not just a trace-counter failure."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn, update_bench_json
+from repro import engine
+from repro.configs.base import ARCH_NAMES, get_config
+from repro.models.model import make_batch
+from repro.models.params import init_params
+from repro.models.targets import lm_curvature_targets
+
+QUICK_NAMES = ("qwen1.5-4b", "granite-moe-1b-a400m", "mamba2-2.7b")
+BATCH, SEQ, N_PROBES, CSIZE = 2, 16, 4, 2
+
+
+def run(quick=True):
+    names = QUICK_NAMES if quick else tuple(ARCH_NAMES)
+    payload = {}
+    for name in names:
+        cfg = get_config(name, reduced=True)
+        batch = make_batch(cfg, BATCH, SEQ, jax.random.PRNGKey(5))
+        tgt = lm_curvature_targets(cfg, batch)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        p = engine.plan(tgt.loss, None, csize=CSIZE,
+                        backend="pytree_fwdrev",
+                        options={"n_probes": N_PROBES,
+                                 **tgt.plan_options()})
+        v = jax.tree.map(lambda l: jnp.full(l.shape, 0.01, l.dtype), params)
+        key = jax.random.PRNGKey(1)
+        runs = {
+            "hvp": lambda: p.hvp(params, v),
+            "diag": lambda: p.diag(params, key),
+            "ggn": lambda: p.ggn(params, v),
+            "fisher": lambda: p.fisher(params, v),
+        }
+        rec = {"family": cfg.family, "n_params": spec_size(params)}
+        for wl, fn in runs.items():
+            us = time_fn(fn, reps=3) * 1e6
+            rec[f"{wl}_us"] = round(us, 1)
+            emit(f"zoo/{name}/{wl}_us", f"{us:.0f}",
+                 f"{cfg.family}, {rec['n_params']} params, "
+                 f"B{BATCH}xS{SEQ}")
+        payload[name] = rec
+    path = update_bench_json("BENCH_pr7.json", "zoo", payload,
+                             env_var="BENCH_PR7_OUT")
+    emit("zoo/pr7_bench_json", path, f"{len(payload)} configs x 4 workloads")
+
+
+def spec_size(params) -> int:
+    from repro.engine.pytree import spec_of
+    return spec_of(params).size
+
+
+def main(quick: bool = False):
+    run(quick=quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -30,7 +30,8 @@ import jax.numpy as jnp
 from repro.engine.registry import BackendSpec, register_backend
 
 __all__ = ["pytree_hvp", "pytree_hvp_fwd", "hutchinson_diag",
-           "rademacher_like", "block_hessian"]
+           "rademacher_like", "block_hessian",
+           "ggn_hvp", "ggn_diag", "empirical_fisher_vp"]
 
 
 def pytree_hvp(f, params, v):
@@ -84,6 +85,83 @@ def hutchinson_diag(f, params, key, n_probes: int = 4, csize: int = 4):
 
     ests = jax.vmap(chunk_estimate)(jax.random.split(key, nchunk))
     return jax.tree.map(lambda e: e.mean(0), ests)
+
+
+# ---------------------------------------------------------------------------
+# structured curvature: GGN and empirical Fisher (Gower & Mello's point --
+# exploit structure instead of always paying for the full Hessian)
+# ---------------------------------------------------------------------------
+
+def _match_dtypes(cot, like):
+    """Cast a head-gradient cotangent tree onto the model-output dtypes so
+    linear_transpose accepts it (the fp32-stable head can promote)."""
+    return jax.tree.map(lambda c, z: c.astype(z.dtype), cot, like)
+
+
+def ggn_hvp(model_fn, head_loss, params, v):
+    """Generalized Gauss-Newton product  G v = (J^T H_head J) v.
+
+    model_fn  : params -> network outputs z (logits; any array/pytree)
+    head_loss : z -> scalar loss (the convex head; for LM targets the
+                sliced next-token xent, see models/targets.py)
+
+    ONE linearization of the model gives both J (applied forward) and J^T
+    (its transpose); the head Hessian is applied as jvp-of-grad, never
+    materialized.  G drops the second-order model-curvature term of the
+    full Hessian, is exact for linear models, and is PSD whenever the head
+    is convex -- the workhorse curvature for Newton-type LM training."""
+    z, lin = jax.linearize(model_fn, params)
+    Jv = lin(v)
+    HJv = jax.jvp(jax.grad(head_loss), (z,), (Jv,))[1]
+    lin_t = jax.linear_transpose(lin, params)
+    return lin_t(_match_dtypes(HJv, z))[0]
+
+
+def ggn_diag(model_fn, head_loss, params, key, n_probes: int = 4,
+             csize: int = 4):
+    """Hutchinson estimate of diag(G): mean_k v_k ⊙ (G v_k), Rademacher v.
+
+    The chunked schedule of ``hutchinson_diag`` applied to the GGN: probes
+    run ``csize`` at a time through ONE shared model linearization (G v is
+    linear in v, so the whole probe batch reuses the stored traces).
+    n_probes must be divisible by csize."""
+    assert n_probes % csize == 0, (n_probes, csize)
+    nchunk = n_probes // csize
+    z, lin = jax.linearize(model_fn, params)
+    lin_t = jax.linear_transpose(lin, params)
+    head_grad = jax.grad(head_loss)
+
+    def gvp(vp):
+        HJv = jax.jvp(head_grad, (z,), (lin(vp),))[1]
+        return lin_t(_match_dtypes(HJv, z))[0]
+
+    def chunk_estimate(key_c):
+        keys = jax.random.split(key_c, csize)
+        probes = jax.vmap(lambda k: rademacher_like(k, params))(keys)
+        gvs = jax.vmap(gvp)(probes)
+        return jax.tree.map(lambda vv, gv: (vv * gv).mean(0), probes, gvs)
+
+    ests = jax.vmap(chunk_estimate)(jax.random.split(key, nchunk))
+    return jax.tree.map(lambda e: e.mean(0), ests)
+
+
+def empirical_fisher_vp(per_example_fn, params, v):
+    """Empirical Fisher-vector product  F v = (1/B) Σ_b g_b (g_b · v).
+
+    per_example_fn : params -> (B,) per-example losses.  With J_L the
+    (B, n) matrix of per-example gradients, F = (1/B) J_L^T J_L, so F v is
+    ONE jvp (J_L v, the per-example directional derivatives) and ONE vjp
+    (J_L^T) through a shared linearization -- the B gradient outer products
+    are never materialized.  For log-likelihood losses F coincides with
+    the GGN exactly when every per-example output residual has unit
+    magnitude, and in expectation under the model distribution (the
+    classical Fisher == GGN identity; tests/test_ggn_property.py pins the
+    exact finite-sample instance)."""
+    losses, lin = jax.linearize(per_example_fn, params)
+    Jv = lin(v)                                           # (B,)
+    lin_t = jax.linear_transpose(lin, params)
+    B = losses.shape[0]
+    return lin_t(_match_dtypes(Jv / B, losses))[0]
 
 
 def block_hessian(f, params, block_path: str, csize: int = 8,
@@ -153,25 +231,87 @@ def block_hessian(f, params, block_path: str, csize: int = 8,
 # share compiled HVPs across calls instead of re-jitting per point)
 # ---------------------------------------------------------------------------
 
+def _pytree_diag_fn(plan):
+    """The single-point diag callable for a plan: Hutchinson over the full
+    Hessian, or over the GGN when the plan says ``diag_of="ggn"``."""
+    f = plan.f
+    n_probes = int(plan.opt("n_probes", 4))
+    if n_probes % max(plan.csize, 1) != 0:
+        raise ValueError(
+            f"diag workload needs csize | n_probes; got csize="
+            f"{plan.csize}, n_probes={n_probes}")
+    diag_of = plan.opt("diag_of", "hessian")
+    if diag_of == "ggn":
+        mf, hl = plan.opt("model_fn"), plan.opt("head_loss")
+        return lambda params, key: ggn_diag(
+            mf, hl, params, key, n_probes=n_probes, csize=plan.csize)
+    if diag_of != "hessian":
+        raise ValueError(
+            f"diag_of must be 'hessian' or 'ggn', got {diag_of!r}")
+    return lambda params, key: hutchinson_diag(
+        f, params, key, n_probes=n_probes, csize=plan.csize)
+
+
 def _pytree_fwdrev_make(plan, workload):
     f = plan.f
     if workload == "hvp":
         return lambda params, v: pytree_hvp(f, params, v)
+    if workload == "ggn":
+        mf, hl = plan.opt("model_fn"), plan.opt("head_loss")
+        return lambda params, v: ggn_hvp(mf, hl, params, v)
+    if workload == "fisher":
+        pex = plan.opt("per_example_fn")
+        return lambda params, v: empirical_fisher_vp(pex, params, v)
     if workload == "diag":
-        n_probes = int(plan.opt("n_probes", 4))
-        if n_probes % max(plan.csize, 1) != 0:
-            raise ValueError(
-                f"diag workload needs csize | n_probes; got csize="
-                f"{plan.csize}, n_probes={n_probes}")
-        return lambda params, key: hutchinson_diag(
-            f, params, key, n_probes=n_probes, csize=plan.csize)
+        return _pytree_diag_fn(plan)
+    if workload == "batched_hvp":
+        # service-coalesced pytree HVPs: rows are RAVELED trees (see
+        # engine/pytree.py); unravel/re-ravel happens under the vmap so
+        # the whole bucket is one device program on one stacked array
+        spec = plan.opt("pytree_spec")
+
+        def one_hvp(a_row, v_row):
+            hv = pytree_hvp(f, spec.unravel(a_row), spec.unravel(v_row))
+            return spec.ravel_traced(hv)
+
+        return lambda A, V: jax.vmap(one_hvp)(A, V)
+    if workload == "batched_diag":
+        spec = plan.opt("pytree_spec")
+        point = _pytree_diag_fn(plan)
+
+        def one_diag(a_row, key_row):
+            return spec.ravel_traced(point(spec.unravel(a_row), key_row))
+
+        return lambda A, K: jax.vmap(one_diag)(A, K)
     raise KeyError(workload)
+
+
+def _pytree_fwdrev_supports(plan, workload):
+    """Veto combinations whose required plan options are missing: the GGN
+    split (model_fn/head_loss), the Fisher per-example loss, and the
+    ravel spec for the service-coalesced batched forms."""
+    needs_split = (workload == "ggn"
+                   or (workload in ("diag", "batched_diag")
+                       and plan.opt("diag_of", "hessian") == "ggn"))
+    if needs_split and (plan.opt("model_fn") is None
+                       or plan.opt("head_loss") is None):
+        return False
+    if workload == "fisher" and plan.opt("per_example_fn") is None:
+        return False
+    if (workload in ("batched_hvp", "batched_diag")
+            and plan.opt("pytree_spec") is None):
+        return False
+    return True
 
 
 register_backend(BackendSpec(
     name="pytree_fwdrev", make=_pytree_fwdrev_make,
-    workloads=frozenset({"hvp", "diag"}), priority=-10, flat_only=False,
-    doc="jvp-of-grad on parameter pytrees; diag = chunked Hutchinson"))
+    workloads=frozenset({"hvp", "diag", "ggn", "fisher",
+                         "batched_hvp", "batched_diag"}),
+    priority=-10, flat_only=False, supports=_pytree_fwdrev_supports,
+    doc="jvp-of-grad on parameter pytrees; diag = chunked Hutchinson "
+        "(of H or the GGN); ggn/fisher = structured curvature products; "
+        "batched_* = service-coalesced raveled rows"))
 
 
 def _pytree_fwd_make(plan, workload):

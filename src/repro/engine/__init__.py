@@ -14,6 +14,15 @@ engine makes the scheduling decision explicit, cached, and tunable:
     fut = p.submit(a, v)          # async: coalesced with concurrent submits
     r3  = fut.result()            # == p.hvp(a, v), served from a micro-batch
 
+Pytree plans (n=None) serve LM-scale parameter structures: ``p.hvp`` /
+``p.diag`` (Hutchinson, chunked ``n_probes`` probes ``csize`` at a time),
+plus the PR 7 workload kinds ``p.ggn(params, v)`` (Gauss-Newton product
+through a ``model_fn`` / ``head_loss`` split in the plan options) and
+``p.fisher(params, v)`` (empirical Fisher via a ``per_example_fn``
+option).  ``p.submit`` coalesces pytree requests too -- raveled into
+per-treedef signature queues, one device transfer per micro-bucket,
+results unraveled back to host pytrees (docs/workloads.md).
+
 Planning decisions:
   csize   : "auto" -> paper §5 scalar-op model argmin;
             "autotune" -> joint (csize, backend, blk_m) microbenchmark,
@@ -43,8 +52,9 @@ latency/throughput dial.  Every executed bucket reports measured us/point
 to the registry telemetry (``execution_stats()``).
 
 Narrative docs: docs/architecture.md (plan/execute + service lifecycle),
-docs/backends.md (capability matrix), docs/autotune.md (csize selection),
-docs/paper_map.md (paper section -> module).
+docs/backends.md (capability matrix), docs/workloads.md (workload-kind
+matrix incl. ggn/fisher and pytree serving), docs/autotune.md (csize
+selection), docs/paper_map.md (paper section -> module).
 """
 
 from .plan import (CurvaturePlan, plan, clear_cache, trace_count,
@@ -54,7 +64,10 @@ from .registry import (BackendSpec, register_backend, get_backend,
                        record_execution, execution_stats, clear_telemetry)
 from .opmodel import (model_csize, csize_candidates,
                       pruned_csize_candidates, mults_chunk_hess,
-                      mults_schunk_hess, count_jaxpr_ops, LANE_WIDTH)
+                      mults_schunk_hess, count_jaxpr_ops, LANE_WIDTH,
+                      probe_chunk_cost, probe_csize_candidates,
+                      model_csize_probes)
+from .pytree import PytreeSpec, spec_of
 from .autotune import (autotune, autotune_csize, clear_autotune_cache,
                        TunedConfig, function_fingerprint, lookup_tuned,
                        probe_count, store_path, load_store, save_store)
@@ -70,6 +83,8 @@ __all__ = [
     "model_csize", "csize_candidates", "pruned_csize_candidates",
     "mults_chunk_hess",
     "mults_schunk_hess", "count_jaxpr_ops", "LANE_WIDTH",
+    "probe_chunk_cost", "probe_csize_candidates", "model_csize_probes",
+    "PytreeSpec", "spec_of",
     "autotune", "autotune_csize", "clear_autotune_cache", "TunedConfig",
     "function_fingerprint", "lookup_tuned", "probe_count",
     "store_path", "load_store", "save_store",

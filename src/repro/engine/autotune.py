@@ -60,10 +60,23 @@ __all__ = [
     "store_path", "load_store", "save_store",
 ]
 
-_TUNABLE_WORKLOADS = ("batched_hvp", "hvp", "hessian")
+_TUNABLE_WORKLOADS = ("batched_hvp", "hvp", "hessian", "diag")
 # backends whose schedule ignores csize: sweeping it would re-measure the
-# same program under different cache keys
-_NON_CHUNKED = frozenset({"reference", "pytree_fwdrev", "pytree_fwd"})
+# same program under different cache keys.  NOT a blanket pytree skip
+# (PR 7): pytree_fwdrev's diag path chunks Hutchinson probes csize at a
+# time, so its csize IS worth sweeping -- for "diag" only.
+_NON_CHUNKED = frozenset({"reference", "pytree_fwd"})
+
+
+def _csize_swept(backend: str, workload: str) -> bool:
+    """Whether this (backend, workload) pair's schedule actually varies
+    with csize.  pytree_fwdrev ignores csize everywhere EXCEPT the chunked
+    Hutchinson/GGN diag path."""
+    if backend in _NON_CHUNKED:
+        return False
+    if backend == "pytree_fwdrev":
+        return workload == "diag"
+    return True
 
 # LRU-bounded like the plan executable cache; keys carry the function
 # FINGERPRINT (not f itself), so per-request closures are never pinned
@@ -417,14 +430,26 @@ def _telemetry_hint(fp: str, n: int, symmetric: bool, workload: str,
     return best
 
 
-def _combo_grid(fp: str, n: int, mm: int, symmetric: bool, backend: str,
+def _combo_grid(fp: str, n, mm: int, symmetric: bool, backend: str,
                 mesh, workload: str, include_pallas: bool,
-                pinned_blk_m: Optional[int] = None):
+                pinned_blk_m: Optional[int] = None, options=()):
     """The joint candidate grid, in measurement order: telemetry hint
     first, then the §5 model argmin, then the rest by static priority.
-    A caller-pinned blk_m (in the plan options) is honored, not swept."""
-    csizes = opmodel.pruned_csize_candidates(n, symmetric)
-    argmin = opmodel.model_csize(n, symmetric)
+    A caller-pinned blk_m (in the plan options) is honored, not swept.
+
+    The "diag" workload sweeps the PROBE-chunk axis (divisors of the
+    plan's n_probes, §5 model transposed to probes) instead of the
+    Hessian-column csize grid."""
+    if workload == "diag":
+        n_probes = int(dict(options).get("n_probes", 4))
+        csizes = opmodel.probe_csize_candidates(n_probes)
+        argmin = opmodel.model_csize_probes(n_probes)
+    elif n is None:
+        # example-based pytree probe of a non-chunked path: csize inert
+        csizes, argmin = [4], 4
+    else:
+        csizes = opmodel.pruned_csize_candidates(n, symmetric)
+        argmin = opmodel.model_csize(n, symmetric)
     csizes = [argmin] + [c for c in csizes if c != argmin]
 
     if mesh is not None:
@@ -454,7 +479,7 @@ def _combo_grid(fp: str, n: int, mm: int, symmetric: bool, backend: str,
         blk_ms = [b for b in (4, 8, 16) if b <= mm] or [mm]
     combos = []
     for bk in backends:
-        for c in (csizes if bk not in _NON_CHUNKED else [argmin]):
+        for c in (csizes if _csize_swept(bk, workload) else [argmin]):
             for bm in (blk_ms if bk == "pallas" else [None]):
                 combos.append((bk, c, bm))
 
@@ -480,14 +505,15 @@ def _combo_grid(fp: str, n: int, mm: int, symmetric: bool, backend: str,
 # the joint tuner
 # ---------------------------------------------------------------------------
 
-def autotune(f, n: int, m=None, symmetric: bool = False,
+def autotune(f, n, m=None, symmetric: bool = False,
              backend: str = "auto", mesh=None, options=(),
              workload: str = "batched_hvp", probe_m: int = 32,
              reps: int = 3, seed: int = 0,
              deadline_s: Optional[float] = None,
              rep_deadline_s: Optional[float] = 0.25,
              use_store: bool = True,
-             include_pallas: Optional[bool] = None) -> TunedConfig:
+             include_pallas: Optional[bool] = None,
+             example=None) -> TunedConfig:
     """Measured argmin over the joint (csize, backend, blk_m) grid for
     ``workload`` of ``f`` at dimension n.
 
@@ -507,7 +533,15 @@ def autotune(f, n: int, m=None, symmetric: bool = False,
     platform incl. device kind, include_pallas) -- options shape the
     probe but are not part of the persistent key.
     ``plan(csize="autotune")`` tunes batched_hvp when an m hint is given,
-    else hvp."""
+    else hvp.
+
+    Pytree plans (n=None) tune by passing ``example`` -- a representative
+    params pytree the probes run against (``workload="diag"`` sweeps the
+    probe-chunk csize of the chunked Hutchinson path, ``"hvp"`` probes the
+    backend choice).  Example-based tunes are memoized in-process but NOT
+    persisted: the tree structure isn't part of the on-disk key, and the
+    probe options (n_probes) aren't either, so a disk hit could answer for
+    the wrong instance."""
     from .plan import plan as make_plan
 
     if workload not in _TUNABLE_WORKLOADS:
@@ -515,7 +549,20 @@ def autotune(f, n: int, m=None, symmetric: bool = False,
     if backend != "auto":
         from .registry import get_backend
         get_backend(backend)            # fail fast on typos
-    n = int(n)
+    spec = None
+    if example is not None:
+        from .pytree import spec_of
+        if workload not in ("hvp", "diag"):
+            raise ValueError(f"example-based tuning serves the per-point "
+                             f"pytree workloads (hvp, diag), not "
+                             f"{workload!r}")
+        spec = spec_of(example)
+        n = None if n is None else int(n)
+    elif n is None:
+        raise ValueError("autotune: n=None requires a representative "
+                         "``example`` pytree to probe against")
+    else:
+        n = int(n)
     mm = _probe_m(m, probe_m)
     options = tuple(options)
     fp = function_fingerprint(f)
@@ -526,9 +573,11 @@ def autotune(f, n: int, m=None, symmetric: bool = False,
     include_pallas = bool(include_pallas)
 
     # include_pallas is part of BOTH keys: an explicit include_pallas=True
-    # call must never be answered by a cached sweep that excluded pallas
+    # call must never be answered by a cached sweep that excluded pallas.
+    # Example-based tunes key on the tree spec as well -- two structures of
+    # equal size must never share a memo slot.
     key = (fp, n, workload, mm, bool(symmetric), backend, mesh, options,
-           include_pallas)
+           include_pallas, spec)
     with _LOCK:
         hit = _AUTOTUNE_CACHE.get(key)
         if hit is not None:
@@ -537,7 +586,8 @@ def autotune(f, n: int, m=None, symmetric: bool = False,
 
     skey = _store_key(fp, n, workload, symmetric, mm, backend, _platform(),
                       include_pallas)
-    persistable = use_store and mesh is None and _persist_enabled()
+    persistable = (use_store and mesh is None and spec is None
+                   and _persist_enabled())
     if persistable:
         entry = load_store().get(skey)
         cfg = _cfg_from_entry(entry, "disk") if entry else None
@@ -547,16 +597,25 @@ def autotune(f, n: int, m=None, symmetric: bool = False,
                                    and cfg.backend != "auto"))
             return cfg
 
-    rng = np.random.RandomState(seed)
-    A = np.asarray(rng.uniform(-2, 2, (mm, n)), np.float32)
-    V = np.asarray(rng.randn(mm, n), np.float32)
+    if spec is None:
+        rng = np.random.RandomState(seed)
+        A = np.asarray(rng.uniform(-2, 2, (mm, n)), np.float32)
+        V = np.asarray(rng.randn(mm, n), np.float32)
+        probe_a, probe_v = A[0], V[0]
+    else:
+        A = V = None
+        probe_a = example
+        probe_v = jax.tree.map(
+            lambda l: jax.numpy.ones_like(jax.numpy.asarray(l)), example)
+    probe_key = jax.random.PRNGKey(seed)
 
     best = None
     last_err = None
     t_sweep = time.perf_counter()
     for bk, c, bm in _combo_grid(fp, n, mm, symmetric, backend, mesh,
                                  workload, include_pallas,
-                                 pinned_blk_m=dict(options).get("blk_m")):
+                                 pinned_blk_m=dict(options).get("blk_m"),
+                                 options=options):
         if (deadline_s is not None and best is not None
                 and time.perf_counter() - t_sweep >= deadline_s):
             break
@@ -569,9 +628,11 @@ def autotune(f, n: int, m=None, symmetric: bool = False,
             if workload == "batched_hvp":
                 run = lambda: p.batched_hvp(A, V)
             elif workload == "hvp":
-                run = lambda: p.hvp(A[0], V[0])
+                run = lambda: p.hvp(probe_a, probe_v)
+            elif workload == "diag":
+                run = lambda: p.diag(probe_a, probe_key)
             else:
-                run = lambda: p.hessian(A[0])
+                run = lambda: p.hessian(probe_a)
             t = _time_once(run, reps=reps, deadline_s=rep_deadline_s)
         except Exception as e:   # a single infeasible candidate is fine
             last_err = e
@@ -586,7 +647,7 @@ def autotune(f, n: int, m=None, symmetric: bool = False,
             f"backend={backend!r}") from last_err
     _remember(key, skey, backend, best,
               consultable=(backend == "auto" and mesh is None
-                           and best.backend != "auto"))
+                           and spec is None and best.backend != "auto"))
     if persistable:
         _persist(skey, best)
     return best

@@ -35,6 +35,7 @@ import numpy as np
 __all__ = [
     "mults_chunk_hess", "mults_schunk_hess", "exact_mults",
     "csize_candidates", "pruned_csize_candidates", "model_csize",
+    "probe_chunk_cost", "probe_csize_candidates", "model_csize_probes",
     "count_jaxpr_ops", "LANE_WIDTH",
 ]
 
@@ -125,6 +126,53 @@ def model_csize(n: int, symmetric: bool = True) -> int:
         return min(cands, key=lambda c: (exact_mults(n, c, symmetric), c))
     return min(c for c in cands
                if exact_mults(n, c, symmetric) <= 1.10 * best)
+
+
+# ---------------------------------------------------------------------------
+# chunked-probe cost model (the §5 dial applied to the PROBE axis)
+# ---------------------------------------------------------------------------
+#
+# The Hutchinson / GGN-diag paths (core.curvature.hutchinson_diag /
+# ggn_diag) evaluate ``n_probes`` random probes ``csize`` at a time through
+# ONE shared linearization per chunk.  The same two forces as §5 apply,
+# transposed from Hessian columns to probes: each chunk pays one trace of f
+# (amortized over its csize probes) while the per-probe tangent state grows
+# linearly in csize (the paper's csize <-> fast-memory dial).  Unlike the
+# flat schedules, csize must DIVIDE n_probes exactly (the chunk loop has no
+# ragged-tail masking).
+
+# relative cost of one f-linearization trace vs one probe-sweep work unit;
+# calibrated on the pytree LM paths where a forward+transpose trace costs
+# a high-single-digit multiple of applying the stored linear map once
+PROBE_TRACE_COST = 8.0
+
+
+def probe_chunk_cost(n_probes: int, c: int,
+                     trace_cost: float = PROBE_TRACE_COST) -> float:
+    """Modeled cost of evaluating ``n_probes`` probes in chunks of ``c``:
+    ceil(P/c) shared linearizations + P per-probe sweeps (constant in c)
+    + the linear fast-memory penalty of carrying c tangents at once."""
+    return math.ceil(n_probes / c) * trace_cost + 6.0 * n_probes + c
+
+
+def probe_csize_candidates(n_probes: int) -> list[int]:
+    """Feasible probe-chunk sizes: divisors of n_probes (exact chunking),
+    capped at the lane width; always includes 1."""
+    n_probes = int(n_probes)
+    if n_probes < 1:
+        raise ValueError(f"n_probes={n_probes} must be >= 1")
+    return [c for c in range(1, n_probes + 1)
+            if n_probes % c == 0 and (c <= LANE_WIDTH or c == 1)]
+
+
+def model_csize_probes(n_probes: int) -> int:
+    """Probe-chunk argmin of ``probe_chunk_cost`` over the divisor set --
+    the csize="auto" selector for pytree diag/GGN-diag plans (previously a
+    hard-coded 4).  Reproduces 4 at the default n_probes=4; at larger probe
+    budgets the trace amortization pushes the argmin up until the state
+    penalty bites (P=64 -> 16)."""
+    cands = probe_csize_candidates(n_probes)
+    return min(cands, key=lambda c: (probe_chunk_cost(n_probes, c), c))
 
 
 def count_jaxpr_ops(n, csize, n_mults):

@@ -225,8 +225,23 @@ class CurvaturePlan:
         return self.executable("batched_hessian")(A)
 
     def diag(self, params, key):
-        """Hutchinson diag(H) estimate on a parameter pytree."""
+        """Hutchinson diag estimate on a parameter pytree: diag(H), or
+        diag(G) when the plan carries ``diag_of="ggn"``."""
         return self.executable("diag")(params, key)
+
+    def ggn(self, params, v):
+        """Gauss-Newton product (J^T H_head J) v on a parameter pytree.
+
+        Needs ``model_fn`` (params -> outputs) and ``head_loss``
+        (outputs -> scalar) in the plan options -- models/targets.py
+        builds both for every zoo config."""
+        return self.executable("ggn")(params, v)
+
+    def fisher(self, params, v):
+        """Empirical Fisher product (1/B) J_L^T J_L v on a parameter
+        pytree.  Needs ``per_example_fn`` (params -> (B,) losses) in the
+        plan options."""
+        return self.executable("fisher")(params, v)
 
     def quadform(self, params, v, w=None):
         """w^T H v with no reverse sweep (pytree backends)."""
@@ -234,22 +249,31 @@ class CurvaturePlan:
         return exe(params, v, v if w is None else w)
 
     # -- async serving -----------------------------------------------------
-    def submit(self, a, v=None, *, service=None, block=True, timeout=None):
+    def submit(self, a, v=None, *, workload=None, service=None, block=True,
+               timeout=None):
         """Submit one request to the coalescing CurvatureService.
 
-        Returns a ``concurrent.futures.Future``:
+        Returns a ``concurrent.futures.Future``.  Flat plans:
 
           submit(a, v) -> future of H_f(a) @ v      (coalesced batched_hvp)
           submit(a)    -> future of the dense H(a)  (coalesced batched_hessian)
 
+        Pytree plans (``n is None``) coalesce too: requests are keyed on
+        the parameter treedef, raveled on the host, and padded into the
+        same micro-bucket path (futures resolve to host numpy pytrees):
+
+          submit(params, v_tree)                  -> future of H @ v
+          submit(params, key, workload="diag")    -> future of diag est.
+
         Requests from concurrent callers that share this plan's signature
-        are padded into one power-of-two micro-batch and executed by the
-        same cached executable ``batched_hvp`` / ``batched_hessian`` use.
+        (and, for pytrees, the treedef) are padded into one power-of-two
+        micro-batch and executed by one cached batched executable.
         ``service`` overrides the process-default service; ``block``/
         ``timeout`` control backpressure when its queue is full."""
         if service is None:
             service = self.service()
-        return service.submit(self, a, v, block=block, timeout=timeout)
+        return service.submit(self, a, v, workload=workload, block=block,
+                              timeout=timeout)
 
     def service(self):
         """The process-default CurvatureService (created on first use)."""
@@ -293,13 +317,19 @@ def _resolve_csize(f, n, m, csize, symmetric, backend, mesh, options):
         if csize < 1:
             raise ValueError(f"csize={csize} must be >= 1")
         return csize
-    if csize == "auto":
+    if csize in ("auto", "autotune"):
         if n is None:
-            return 4          # pytree workloads: probe-chunk default
-        return opmodel.model_csize(n, symmetric)
-    if csize == "autotune":
-        # n is None here: flat autotune plans resolve through the joint
-        # tuner in plan() (which also threads the tuned blk_m through)
+            # pytree workloads chunk over the PROBE axis (Hutchinson /
+            # GGN-diag): the probe-chunk op model picks the argmin over
+            # divisors of n_probes.  For measured tuning run
+            # engine.autotune(f, workload="diag", example=params, ...)
+            # and pass its csize explicitly.
+            return opmodel.model_csize_probes(
+                int(dict(options).get("n_probes", 4)))
+        if csize == "auto":
+            return opmodel.model_csize(n, symmetric)
+        # flat "autotune" plans resolve through the joint tuner in plan()
+        # (which also threads the tuned blk_m through); unreachable there
         return 4
     raise ValueError(f"csize must be int, 'auto' or 'autotune'; got {csize!r}")
 

@@ -1,0 +1,112 @@
+"""Pytree <-> flat-vector marshalling for the serving layer.
+
+The CurvatureService coalesces requests by stacking them into one (k, n)
+host array per bucket; LM parameter pytrees don't stack.  ``PytreeSpec``
+is the bridge: a HASHABLE summary of a tree's static structure (treedef +
+leaf shapes + leaf dtypes) plus the ravel/unravel maps between that tree
+and a flat ``(size,)`` vector.
+
+Hashability is the point -- the spec rides in ``plan.options``, so a
+pytree request lands in the ordinary executable cache and telemetry
+machinery keyed on the plan signature: two requests with the same treedef
+share one compiled batched program and one service queue; a different
+treedef is a different signature and therefore a different queue.
+
+``unravel`` uses static offsets only, so the same method serves both the
+host side (numpy rows coming off a bucket) and the traced side (inside the
+jitted batched executables).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PytreeSpec", "spec_of"]
+
+
+@dataclass(frozen=True)
+class PytreeSpec:
+    """Static structure of one parameter pytree: the coalescing key.
+
+    treedef : jax PyTreeDef (hashable)
+    shapes  : tuple of leaf shapes, in treedef leaf order
+    dtypes  : tuple of leaf dtype names, same order
+    """
+
+    treedef: Any
+    shapes: tuple
+    dtypes: tuple
+
+    @property
+    def size(self) -> int:
+        """Total flat length (the plan-level ``n`` of the raveled problem)."""
+        return sum(int(np.prod(s)) if s else 1 for s in self.shapes)
+
+    @property
+    def ravel_dtype(self):
+        """Common dtype of the raveled vector (numpy promotion rules)."""
+        return np.result_type(*self.dtypes) if self.dtypes else np.float32
+
+    def _offsets(self):
+        off = 0
+        for shape, dtype in zip(self.shapes, self.dtypes):
+            n = int(np.prod(shape)) if shape else 1
+            yield off, n, shape, dtype
+            off += n
+
+    def check(self, tree) -> list:
+        """Leaves of ``tree`` in treedef order, or ValueError on mismatch."""
+        leaves, treedef = jax.tree.flatten(tree)
+        if treedef != self.treedef:
+            raise ValueError(
+                f"pytree structure mismatch: expected {self.treedef}, "
+                f"got {treedef}")
+        for leaf, shape in zip(leaves, self.shapes):
+            if tuple(np.shape(leaf)) != tuple(shape):
+                raise ValueError(
+                    f"pytree leaf shape mismatch: expected {shape}, got "
+                    f"{np.shape(leaf)}")
+        return leaves
+
+    # -- host side (service marshalling) ------------------------------------
+    def ravel(self, tree) -> np.ndarray:
+        """tree -> (size,) host numpy vector (device_get at most once per
+        leaf; the service ships ONE stacked array per bucket)."""
+        leaves = self.check(tree)
+        if not leaves:
+            return np.zeros((0,), self.ravel_dtype)
+        return np.concatenate(
+            [np.asarray(l).ravel().astype(self.ravel_dtype, copy=False)
+             for l in leaves])
+
+    # -- both sides ----------------------------------------------------------
+    def unravel(self, vec):
+        """(size,) vector -> tree.  Static offsets only, so this works on
+        host numpy rows AND on traced values inside jitted executables."""
+        leaves = [vec[o:o + n].reshape(shape).astype(dtype)
+                  for o, n, shape, dtype in self._offsets()]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    # -- traced side (inside the batched executables) ------------------------
+    def ravel_traced(self, tree):
+        """tree -> (size,) jnp vector under trace (one result row)."""
+        leaves = self.check(tree)
+        if not leaves:
+            return jnp.zeros((0,), self.ravel_dtype)
+        return jnp.concatenate(
+            [jnp.ravel(l).astype(self.ravel_dtype) for l in leaves])
+
+
+def spec_of(tree) -> PytreeSpec:
+    """The PytreeSpec of a concrete parameter tree."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return PytreeSpec(
+        treedef=treedef,
+        shapes=tuple(tuple(np.shape(l)) for l in leaves),
+        dtypes=tuple(str(np.asarray(l).dtype if not hasattr(l, "dtype")
+                         else l.dtype) for l in leaves))

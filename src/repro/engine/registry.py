@@ -12,11 +12,21 @@ Workloads (positional array signatures of the produced callable):
   "batched_hvp"     (A, V)   -> R          m instances, (m, n) arrays
   "batched_hessian" (A,)     -> Hs         (m, n) -> (m, n, n)
   "diag"            (params, key) -> tree  Hutchinson diag(H) on pytrees
+                                           (diag_of="ggn" estimates diag(G))
   "quadform"        (params, v, w) -> scalar  w^T H v, pure-forward
+  "ggn"             (params, v) -> tree    Gauss-Newton (J^T H_head J) v;
+                                           needs model_fn/head_loss options
+  "fisher"          (params, v) -> tree    empirical Fisher (1/B) J_L^T J_L v;
+                                           needs the per_example_fn option
+  "batched_diag"    (A, K) -> (m, size)    coalesced pytree diag: raveled
+                                           param rows + PRNG-key rows
 
 Flat backends (``flat_only=True``) require ``plan.n`` to be a concrete int;
 pytree backends accept arbitrary parameter trees and are selected when
-``plan.n is None``.
+``plan.n is None``.  A pytree plan whose options carry a ``pytree_spec``
+(engine/pytree.py) additionally serves the batched workloads on RAVELED
+(m, size) rows -- that is how the CurvatureService coalesces pytree
+requests through the same micro-bucket path as flat plans.
 """
 
 from __future__ import annotations
@@ -34,7 +44,7 @@ __all__ = [
 ]
 
 WORKLOADS = ("hvp", "hessian", "batched_hvp", "batched_hessian", "diag",
-             "quadform")
+             "quadform", "ggn", "fisher", "batched_diag")
 
 
 @dataclass(frozen=True)

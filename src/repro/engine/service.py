@@ -8,6 +8,14 @@ requests accumulate in a bounded per-plan queue, and a dispatcher thread
 coalesces them into padded power-of-two micro-batches executed via the
 plan's ordinary cached ``batched_hvp`` / ``batched_hessian`` executables.
 
+Pytree plans coalesce the same way (PR 7): requests are keyed on the
+parameter TREEDEF (engine/pytree.py), raveled to one host row each at
+submit time, stacked/padded into the identical micro-bucket path (one
+device transfer per bucket), and executed by the pytree backend's
+``batched_hvp`` / ``batched_diag`` executables; futures resolve to host
+numpy pytrees.  Mixed-treedef traffic lands in separate queues because the
+spec is part of the derived plan's cache signature.
+
 Why power-of-two buckets: jit re-specializes per batch shape, so serving
 raw request counts would compile one program per observed count.  Padding
 to the next power of two (capped at ``max_batch``) bounds the shape set to
@@ -61,6 +69,7 @@ import numpy as np
 
 from . import registry
 from .plan import CurvaturePlan, bucket_size, pad_rows
+from .pytree import PytreeSpec, spec_of
 
 __all__ = [
     "CurvatureService", "ServiceClosed", "ServiceQueueFull",
@@ -91,12 +100,20 @@ class _Request:
 
 @dataclass
 class _PlanQueue:
-    """Pending requests sharing one (plan signature, workload)."""
+    """Pending requests sharing one (plan signature, workload).
+
+    For pytree plans ``plan`` is the spec-carrying derived plan (the
+    submitted plan plus a ``pytree_spec`` option) and ``spec`` is that
+    spec: requests with different treedefs derive different plans, hence
+    different cache keys, hence DIFFERENT queues -- mixed-treedef traffic
+    can never be stacked into one bucket."""
     plan: CurvaturePlan
     workload: str                # "batched_hvp" | "batched_hessian"
+                                 # | "batched_diag" (pytree)
     backend: str
     key: tuple                   # the plan's executable cache key (also the
                                  # _queues index and the telemetry key)
+    spec: Optional[PytreeSpec] = None    # set for pytree queues
     requests: collections.deque = field(default_factory=collections.deque)
 
 
@@ -146,46 +163,66 @@ class CurvatureService:
 
     # -- client side --------------------------------------------------------
 
-    def submit(self, plan: CurvaturePlan, a, v=None, *, block: bool = True,
+    def submit(self, plan: CurvaturePlan, a, v=None, *,
+               workload: Optional[str] = None, block: bool = True,
                timeout: Optional[float] = None) -> Future:
         """Enqueue one request; returns a Future of the single-point result.
 
-        ``v`` given  -> future resolves to H_f(a) @ v  (shape (n,))
-        ``v`` None   -> future resolves to H_f(a)      (shape (n, n))
+        Flat plans (``plan.n`` an int):
 
-        Results are host numpy arrays (the serving payload); inputs are
-        host-marshalled too, so numpy inputs are the fast path.
+          ``v`` given  -> future resolves to H_f(a) @ v  (shape (n,))
+          ``v`` None   -> future resolves to H_f(a)      (shape (n, n))
+
+        Pytree plans (``plan.n is None``) coalesce per TREEDEF: the params
+        (and tangent) trees are raveled on the host, stacked into the same
+        micro-bucket path, and unraveled before the future resolves --
+
+          submit(plan, params, v_tree)               -> H @ v (numpy tree)
+          submit(plan, params, key, workload="diag") -> diag estimate
+
+        Results are host numpy arrays / pytrees of them (the serving
+        payload); inputs are host-marshalled too, so numpy inputs are the
+        fast path.
 
         Backpressure: when ``max_queue`` requests are already pending the
         call blocks until space frees (``timeout`` seconds at most), or
         raises ``ServiceQueueFull`` immediately when ``block=False``.
         """
         if plan.n is None:
-            raise ValueError(
-                "CurvatureService coalesces flat-vector plans only; pytree "
-                "plans execute directly via plan.hvp(params, v)")
-        workload = "batched_hvp" if v is not None else "batched_hessian"
-        route = self._routes.get((id(plan), workload))
-        if route is None:
-            backend = plan.backend_for(workload)
-            key = plan.cache_key(workload, backend)
-            if len(self._routes) > 4 * max(len(self._queues), 64):
-                self._routes.clear()     # id-reuse guard, keeps dict small
-            route = self._routes[(id(plan), workload)] = (plan, backend, key)
-        _plan_ref, backend, key = route
-        # marshal on the HOST: requests are stacked with np.stack and shipped
-        # to the device as ONE array per bucket -- stacking k device-resident
-        # rows instead costs one dispatch per row (~100x slower on CPU jax)
-        a = np.asarray(a)
-        if a.shape != (plan.n,):
-            raise ValueError(
-                f"submit expects a single point of shape ({plan.n},), got "
-                f"{a.shape}; batched arrays go through plan.{workload}")
-        if v is not None:
-            v = np.asarray(v)
-            if v.shape != (plan.n,):
+            dplan, workload, backend, key, spec, a, v = \
+                self._marshal_pytree(plan, a, v, workload)
+        else:
+            if workload is not None:
                 raise ValueError(
-                    f"submit expects v of shape ({plan.n},), got {v.shape}")
+                    "workload= selects the pytree workload; flat plans "
+                    "infer it from the arguments (v given -> hvp)")
+            dplan, spec = plan, None
+            workload = "batched_hvp" if v is not None else "batched_hessian"
+            route = self._routes.get((id(plan), workload))
+            if route is None:
+                backend = plan.backend_for(workload)
+                key = plan.cache_key(workload, backend)
+                if len(self._routes) > 4 * max(len(self._queues), 64):
+                    self._routes.clear()  # id-reuse guard, keeps dict small
+                route = self._routes[(id(plan), workload)] = (plan, backend,
+                                                              key)
+            _plan_ref, backend, key = route
+            # marshal on the HOST: requests are stacked with np.stack and
+            # shipped to the device as ONE array per bucket -- stacking k
+            # device-resident rows instead costs one dispatch per row
+            # (~100x slower on CPU jax)
+            a = np.asarray(a)
+            if a.shape != (plan.n,):
+                raise ValueError(
+                    f"submit expects a single point of shape ({plan.n},), "
+                    f"got {a.shape}; batched arrays go through "
+                    f"plan.{workload}")
+            if v is not None:
+                v = np.asarray(v)
+                if v.shape != (plan.n,):
+                    raise ValueError(
+                        f"submit expects v of shape ({plan.n},), got "
+                        f"{v.shape}")
         fut: Future = Future()
         with self._space:
             if self._closed:
@@ -206,8 +243,8 @@ class CurvatureService:
                         f"(max_queue={self.max_queue})")
             q = self._queues.get(key)
             if q is None:
-                q = _PlanQueue(plan=plan, workload=workload, backend=backend,
-                               key=key)
+                q = _PlanQueue(plan=dplan, workload=workload,
+                               backend=backend, key=key, spec=spec)
                 self._queues[key] = q
             q.requests.append(_Request(a, v, fut, self._clock()))
             self._pending += 1
@@ -221,6 +258,60 @@ class CurvatureService:
         if nudge:
             self._wake.set()
         return fut
+
+    def _marshal_pytree(self, plan: CurvaturePlan, a, v, workload):
+        """Resolve and host-marshal one pytree request.
+
+        Coalescing key: a derived plan carrying the request's PytreeSpec as
+        an option, so the ordinary executable cache / telemetry signature
+        machinery separates treedefs.  The params (and tangent) trees ravel
+        to one host row each; PRNG keys pass through as raw key-data rows.
+        Returns (derived plan, batched workload, backend, cache key, spec,
+        a_row, v_row)."""
+        if workload in (None, "hvp"):
+            if v is None:
+                raise ValueError(
+                    "pytree submits coalesce HVPs -- submit(plan, params, "
+                    "v) -- or Hutchinson diag -- submit(plan, params, key, "
+                    "workload='diag'); dense pytree Hessians are not a "
+                    "service workload")
+            workload = "batched_hvp"
+        elif workload == "diag":
+            if v is None:
+                raise ValueError(
+                    "workload='diag' needs the probe PRNG key as the "
+                    "second argument: submit(plan, params, key, "
+                    "workload='diag')")
+            workload = "batched_diag"
+        else:
+            raise ValueError(
+                f"pytree submits support workload 'hvp' or 'diag', got "
+                f"{workload!r}")
+        spec = spec_of(a)
+        route_key = (id(plan), workload, spec)
+        route = self._routes.get(route_key)
+        if route is None:
+            import dataclasses
+            opts = dict(plan.options)
+            opts["pytree_spec"] = spec
+            dplan = dataclasses.replace(
+                plan, options=tuple(sorted(opts.items())))
+            backend = dplan.backend_for(workload)
+            key = dplan.cache_key(workload, backend)
+            if len(self._routes) > 4 * max(len(self._queues), 64):
+                self._routes.clear()
+            route = self._routes[route_key] = (plan, dplan, backend, key)
+        _plan_ref, dplan, backend, key = route
+        a_row = spec.ravel(a)               # validates treedef + shapes
+        if workload == "batched_hvp":
+            v_row = spec.ravel(v)           # tangent must match the params
+        else:
+            dt = getattr(v, "dtype", None)
+            if dt is not None and jax.dtypes.issubdtype(dt,
+                                                        jax.dtypes.prng_key):
+                v = jax.random.key_data(v)   # typed keys -> raw key data
+            v_row = np.asarray(v)
+        return dplan, workload, backend, key, spec, a_row, v_row
 
     # -- dispatcher side ----------------------------------------------------
 
@@ -287,12 +378,16 @@ class CurvatureService:
         try:
             # marshal BOTH operands before t0: telemetry must charge the
             # same work to hvp and hessian buckets (execution + readback,
-            # not host-to-device marshalling)
+            # not host-to-device marshalling).  Pytree buckets were raveled
+            # per request at submit time, so this is still ONE device
+            # transfer per operand per bucket.
             A = jnp.asarray(pad_rows(np.stack([r.a for r in live]), bucket))
-            V = None if q.workload != "batched_hvp" else jnp.asarray(
+            V = None if q.workload == "batched_hessian" else jnp.asarray(
                 pad_rows(np.stack([r.v for r in live]), bucket))
             t0 = time.perf_counter()
-            if V is not None:
+            if q.spec is not None:
+                out = q.plan.executable(q.workload)(A, V)
+            elif V is not None:
                 out = q.plan.batched_hvp(A, V)
             else:
                 out = q.plan.batched_hessian(A)
@@ -313,7 +408,14 @@ class CurvatureService:
         for i, r in enumerate(live):
             # copy: out[i] would be a view pinning the whole padded bucket
             # (max_batch rows) for as long as the client keeps its result
-            r.future.set_result(out[i].copy())
+            row = out[i].copy()
+            if q.spec is not None:
+                try:
+                    row = q.spec.unravel(row)
+                except Exception as e:      # pragma: no cover - spec bug
+                    r.future.set_exception(e)
+                    continue
+            r.future.set_result(row)
 
     def _dispatch_loop(self) -> None:
         while True:

@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["quantize_kv", "dequantize_kv", "init_quant_attn_cache",
-           "cache_write_one_quant", "cache_read_quant"]
+           "cache_write_one_quant", "cache_read_quant",
+           "kv_sensitivity", "choose_kv_cache_dtype"]
 
 
 def quantize_kv(x):
@@ -67,3 +68,49 @@ def cache_read_quant(cache, dtype=jnp.bfloat16):
     k = dequantize_kv(cache["k"], cache["k_scale"], dtype)
     v = dequantize_kv(cache["v"], cache["v_scale"], dtype)
     return k, v
+
+
+# ---------------------------------------------------------------------------
+# curvature-informed per-layer cache dtype policy (PR 7)
+# ---------------------------------------------------------------------------
+#
+# The Hessian-diagonal spectrum (models.targets.diag_spectrum) measures how
+# sharply the loss curves along each parameter -- layers whose KV projections
+# (wk / wv) sit in flat curvature regions tolerate the int8 rounding error,
+# while high-curvature layers amplify it into logits. The policy quantizes
+# the FLATTEST layers first, up to a memory budget.
+
+import re as _re
+
+_KV_LEAF = _re.compile(r"(?:^|/)(?:wk|wv)\[(\d+)\]$")
+
+
+def kv_sensitivity(spectrum: dict) -> dict:
+    """Per-layer curvature score of the KV projections.
+
+    ``spectrum`` is a ``diag_spectrum`` report; every ``...wk[i]`` /
+    ``...wv[i]`` entry contributes its mean_abs. Returns {layer: score}
+    (mean over that layer's matching entries)."""
+    acc: dict = {}
+    for path, stats in spectrum.items():
+        m = _KV_LEAF.search(path)
+        if m is None:
+            continue
+        layer = int(m.group(1))
+        acc.setdefault(layer, []).append(float(stats["mean_abs"]))
+    return {layer: sum(v) / len(v) for layer, v in sorted(acc.items())}
+
+
+def choose_kv_cache_dtype(sensitivity: dict,
+                          int8_budget_frac: float = 0.5) -> dict:
+    """Assign a cache dtype per layer from curvature scores.
+
+    The ``floor(L * int8_budget_frac)`` lowest-sensitivity layers get
+    "int8"; the rest keep "bfloat16". Ties break toward the lower layer
+    index (deterministic policy). Empty sensitivity -> empty policy."""
+    if not 0.0 <= int8_budget_frac <= 1.0:
+        raise ValueError(f"int8_budget_frac={int8_budget_frac} not in [0,1]")
+    layers = sorted(sensitivity)
+    n_int8 = int(len(layers) * int8_budget_frac)
+    quantized = set(sorted(layers, key=lambda l: (sensitivity[l], l))[:n_int8])
+    return {l: ("int8" if l in quantized else "bfloat16") for l in layers}

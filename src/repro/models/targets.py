@@ -1,0 +1,116 @@
+"""Curvature targets for zoo models: the objective splits the engine needs.
+
+The GGN/Fisher workloads (PR 7) decompose the LM objective as
+``loss(params) = head_loss(model_fn(params))``:
+
+  model_fn   params -> next-token logits, already sliced to the label
+             positions (for VLM configs the frontend positions are dropped,
+             matching ``model.loss_fn``'s slice).
+  head_loss  logits -> scalar fp32 cross-entropy (convex in the logits --
+             the property the GGN curvature ``J^T H_head J`` relies on).
+  per_example  params -> (B,) per-sequence xent, for the empirical Fisher
+             ``(1/B) J_L^T J_L``.
+
+For non-MoE families ``loss(p) == head_loss(model_fn(p))`` EXACTLY (same
+forward, same slice, same reduction).  MoE configs add the auxiliary
+load-balance term ``MOE_AUX_COEF * aux`` to ``loss`` only: the GGN/Fisher
+split deliberately excludes it -- GGN is a curvature *approximation* of the
+task head, and the aux term has no model_fn/head factorization.  The zoo
+conformance suite therefore checks GGN parity against an oracle built from
+the SAME split, never against the full-loss Hessian.
+
+``diag_spectrum`` turns a Hessian-diagonal pytree into a flat per-leaf
+report (stacked ``layers/`` leaves split per layer row) that
+``models.kv_quant.kv_sensitivity`` consumes for quantization decisions.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import cross_entropy, forward, loss_fn
+
+__all__ = ["CurvatureTarget", "lm_curvature_targets", "diag_spectrum"]
+
+
+@dataclass(frozen=True)
+class CurvatureTarget:
+    """The four callables a curvature plan over one (cfg, batch) needs."""
+    loss: Callable[[Any], Any]            # params -> scalar (full objective)
+    model_fn: Callable[[Any], Any]        # params -> sliced logits
+    head_loss: Callable[[Any], Any]       # logits -> scalar xent
+    per_example_fn: Callable[[Any], Any]  # params -> (B,) per-sequence xent
+
+    def plan_options(self) -> dict:
+        """The extra_options dict ``engine.plan`` needs so pytree_fwdrev
+        can serve ggn / fisher alongside hvp / diag."""
+        return {"model_fn": self.model_fn, "head_loss": self.head_loss,
+                "per_example_fn": self.per_example_fn}
+
+
+def lm_curvature_targets(cfg, batch, mesh=None) -> CurvatureTarget:
+    """Build the loss split for one zoo config and one materialized batch.
+
+    ``batch`` is a ``model.make_batch``-style dict; the returned callables
+    close over it (the batch is data, not a differentiation variable)."""
+    F = cfg.frontend_len if (cfg.frontend == "vlm") else 0
+    S = batch["tokens"].shape[1]
+    labels = batch["tokens"][:, 1:]
+
+    def model_fn(params):
+        logits, _, _ = forward(params, cfg, batch, mesh, mode="train")
+        # logits position F+i predicts tokens[i+1] (same slice as loss_fn)
+        return jax.lax.slice_in_dim(logits, F, F + S - 1, axis=1)
+
+    def head_loss(lg):
+        return cross_entropy(lg, labels, mesh)
+
+    def loss(params):
+        return loss_fn(params, cfg, batch, mesh)[0]
+
+    def per_example(params):
+        lf = model_fn(params).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        picked = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+        return (lse - picked).mean(axis=1)          # (B,)
+
+    return CurvatureTarget(loss=loss, model_fn=model_fn, head_loss=head_loss,
+                           per_example_fn=per_example)
+
+
+# ---------------------------------------------------------------------------
+# Hessian-diagonal spectrum report
+# ---------------------------------------------------------------------------
+
+_STACKED_PREFIXES = ("layers/", "encoder/layers/")
+
+
+def _leaf_stats(arr) -> dict:
+    a = np.abs(np.asarray(arr, np.float64))
+    return {"mean_abs": float(a.mean()), "rms": float(np.sqrt((a * a).mean())),
+            "max_abs": float(a.max()), "size": int(a.size)}
+
+
+def diag_spectrum(diag_tree) -> dict:
+    """Per-leaf curvature statistics of a Hessian/GGN-diagonal pytree.
+
+    Returns {path: {mean_abs, rms, max_abs, size}}.  Leaves under a stacked
+    layer prefix (leading lax.scan dim) are split into one entry per layer,
+    named ``path[i]`` -- that per-layer resolution is what the KV-cache
+    quantization policy keys on."""
+    from repro.models.params import flatten
+    flat = flatten(diag_tree)
+    out = {}
+    for path, leaf in sorted(flat.items()):
+        arr = np.asarray(leaf)
+        if path.startswith(_STACKED_PREFIXES) and arr.ndim >= 1:
+            for i in range(arr.shape[0]):
+                out[f"{path}[{i}]"] = _leaf_stats(arr[i])
+        else:
+            out[path] = _leaf_stats(arr)
+    return out

@@ -220,7 +220,7 @@ def test_exception_propagates_into_every_future():
     svc.shutdown()
 
 
-def test_bad_shapes_and_pytree_plans_rejected_at_submit():
+def test_bad_shapes_rejected_at_submit():
     p = _plan()
     svc = CurvatureService(start=False)
     A, V = _data(N, 1, seed=8)
@@ -228,9 +228,6 @@ def test_bad_shapes_and_pytree_plans_rejected_at_submit():
         svc.submit(p, np.zeros((N + 1,), np.float32), V[0])
     with pytest.raises(ValueError):
         svc.submit(p, A[0], np.zeros((2, N), np.float32))
-    p_tree = engine.plan(testfns.rosenbrock, None, backend="pytree_fwdrev")
-    with pytest.raises(ValueError):
-        svc.submit(p_tree, A[0], V[0])
     svc.shutdown()
 
 
@@ -338,3 +335,129 @@ def test_m_zero_rejected_with_hint_semantics_message():
         engine.plan(testfns.rosenbrock, N, m=-3)
     # m=None remains the "no hint" spelling
     assert engine.plan(testfns.rosenbrock, N).m is None
+
+
+# ---------------------------------------------------------------------------
+# pytree coalescing (PR 7): treedef-keyed queues, ravel/unravel marshalling
+# ---------------------------------------------------------------------------
+
+def _tree_obj(t):
+    """Generic pytree objective: works for any dict-of-arrays structure."""
+    import jax
+    sq = sum(jnp.sum(l ** 2) for l in jax.tree.leaves(t))
+    return 0.25 * sq * sq + sum(jnp.sum(jnp.cos(l))
+                                for l in jax.tree.leaves(t))
+
+
+def _tree_point(i):
+    return {"w": jnp.arange(6, dtype=jnp.float32).reshape(3, 2) / 7 + 0.1 * i,
+            "b": jnp.full((4,), 0.5 + 0.05 * i, jnp.float32)}
+
+
+def test_pytree_submits_coalesce_and_match_direct():
+    """Interleaved pytree HVP submits coalesce into ONE batched_hvp bucket
+    per plan signature and every unravelled result matches the direct
+    executable -- the PR 7 acceptance witness."""
+    import jax
+    engine.clear_telemetry()
+    p = engine.plan(_tree_obj, None, csize=2, backend="pytree_fwdrev")
+    k = 5
+    pts = [_tree_point(i) for i in range(k)]
+    v = jax.tree.map(jnp.ones_like, pts[0])
+    svc = CurvatureService(start=False, max_batch=8)
+    futs = [svc.submit(p, pts[i], v) for i in range(k)]
+    assert svc.flush() == k
+    st = svc.stats()
+    assert st["batches"] == 1 and st["dispatched"] == k
+    for i, fut in enumerate(futs):
+        got = fut.result(timeout=0)
+        want = p.hvp(pts[i], v)
+        assert jax.tree.structure(got) == jax.tree.structure(pts[i])
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            assert isinstance(g, np.ndarray)
+            np.testing.assert_allclose(g, np.asarray(w),
+                                       rtol=1e-5, atol=1e-5)
+    svc.shutdown()
+    recs = [r for r in engine.execution_stats()
+            if r["workload"] == "batched_hvp"]
+    assert recs and recs[0]["by_bucket"][8]["count"] == 1
+
+
+def test_pytree_mixed_treedefs_use_separate_queues():
+    """Two different tree structures through ONE plan object must land in
+    separate signature queues (distinct derived cache keys), never mixed
+    into one raveled bucket."""
+    import jax
+    p = engine.plan(_tree_obj, None, csize=2, backend="pytree_fwdrev")
+    t_a = _tree_point(0)
+    t_b = {"x": jnp.arange(5, dtype=jnp.float32) / 3}
+    svc = CurvatureService(start=False, max_batch=8)
+    f_a = svc.submit(p, t_a, jax.tree.map(jnp.ones_like, t_a))
+    f_b = svc.submit(p, t_b, jax.tree.map(jnp.ones_like, t_b))
+    assert svc.flush() == 2
+    assert svc.stats()["batches"] == 2       # one bucket per treedef
+    wa = p.hvp(t_a, jax.tree.map(jnp.ones_like, t_a))
+    wb = p.hvp(t_b, jax.tree.map(jnp.ones_like, t_b))
+    for got, want in ((f_a.result(timeout=0), wa),
+                      (f_b.result(timeout=0), wb)):
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_allclose(g, np.asarray(w),
+                                       rtol=1e-5, atol=1e-5)
+    svc.shutdown()
+
+
+def test_pytree_diag_submits_coalesce():
+    """workload="diag" pytree submits batch PRNG keys into batched_diag rows
+    and match the direct plan.diag per key."""
+    import jax
+    p = engine.plan(_tree_obj, None, csize=2, backend="pytree_fwdrev",
+                    n_probes=2)
+    pts = [_tree_point(i) for i in range(3)]
+    keys = [jax.random.PRNGKey(s) for s in (0, 1, 2)]
+    svc = CurvatureService(start=False, max_batch=8)
+    futs = [svc.submit(p, pts[i], keys[i], workload="diag")
+            for i in range(3)]
+    assert svc.flush() == 3
+    assert svc.stats()["batches"] == 1
+    for i, fut in enumerate(futs):
+        got = fut.result(timeout=0)
+        want = p.diag(pts[i], keys[i])
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_allclose(g, np.asarray(w),
+                                       rtol=1e-4, atol=1e-5)
+    svc.shutdown()
+
+
+def test_pytree_submit_validation_and_exceptions():
+    import jax
+    p = engine.plan(_tree_obj, None, csize=2, backend="pytree_fwdrev")
+    t = _tree_point(0)
+    svc = CurvatureService(start=False)
+    # v treedef mismatch rejected synchronously at submit
+    with pytest.raises(ValueError):
+        svc.submit(p, t, {"x": jnp.ones((5,))})
+    # dense pytree Hessians are not a service workload
+    with pytest.raises(ValueError):
+        svc.submit(p, t)
+    # workload= is a pytree-only knob
+    p_flat = _plan()
+    A, V = _data(N, 1, seed=16)
+    with pytest.raises(ValueError):
+        svc.submit(p_flat, A[0], V[0], workload="hvp")
+    svc.shutdown()
+
+    # a trace-time exception propagates through the ravel/unravel path
+    boom = RuntimeError("deliberate pytree failure")
+
+    def bad(tree):
+        raise boom
+
+    p_bad = engine.plan(bad, None, backend="pytree_fwdrev")
+    svc2 = CurvatureService(start=False)
+    futs = [svc2.submit(p_bad, _tree_point(i),
+                        jax.tree.map(jnp.ones_like, t)) for i in range(2)]
+    assert svc2.flush() == 2
+    for fut in futs:
+        with pytest.raises(RuntimeError, match="deliberate"):
+            fut.result(timeout=0)
+    svc2.shutdown()

@@ -1,0 +1,102 @@
+"""Model-zoo conformance: EVERY configs/ architecture must plan and execute
+hvp, diag, and ggn through ``engine.plan()`` on its tiny-ified instance,
+match the direct pytree oracles at 1e-6 normalized error, and hit the
+executable cache with ZERO retraces on re-planning (trace-counter witness).
+
+This is the PR 7 acceptance gate: the zoo spans every family (dense, moe,
+ssm, hybrid, vlm, encdec), so a pass here means the pytree workloads hold
+for arbitrary LM parameter structures, not just toy dicts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.configs.base import ARCH_NAMES, get_config
+from repro.core.curvature import (empirical_fisher_vp, ggn_hvp,
+                                  hutchinson_diag, pytree_hvp)
+from repro.models.model import make_batch
+from repro.models.params import init_params
+from repro.models.targets import diag_spectrum, lm_curvature_targets
+from repro.models.kv_quant import choose_kv_cache_dtype, kv_sensitivity
+
+BATCH, SEQ = 2, 16          # seq 16 keeps the vlm configs' token span >= 8
+N_PROBES, CSIZE = 2, 2
+
+_CASES: dict = {}
+
+
+def _case(name):
+    """One tiny-ified zoo instance per arch, built once per session: the
+    reduced config, its curvature targets, params, and the shared plan."""
+    if name not in _CASES:
+        cfg = get_config(name, reduced=True)
+        batch = make_batch(cfg, BATCH, SEQ, key=jax.random.PRNGKey(7))
+        tgt = lm_curvature_targets(cfg, batch)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opts = {"n_probes": N_PROBES, **tgt.plan_options()}
+        p = engine.plan(tgt.loss, None, csize=CSIZE,
+                        backend="pytree_fwdrev", options=opts)
+        _CASES[name] = (cfg, tgt, params, p, opts)
+    return _CASES[name]
+
+
+def _nerr(got, want):
+    g = np.concatenate([np.asarray(l, np.float64).ravel()
+                        for l in jax.tree.leaves(got)])
+    w = np.concatenate([np.asarray(l, np.float64).ravel()
+                        for l in jax.tree.leaves(want)])
+    return float(np.linalg.norm(g - w) / (np.linalg.norm(w) + 1e-30))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_zoo_hvp_diag_ggn_parity_and_zero_retrace(name):
+    cfg, tgt, params, p, opts = _case(name)
+    v = jax.tree.map(lambda l: jnp.full(l.shape, 0.01, l.dtype), params)
+    key = jax.random.PRNGKey(3)
+
+    got_hvp = p.hvp(params, v)
+    want_hvp = jax.jit(lambda a, vv: pytree_hvp(tgt.loss, a, vv))(params, v)
+    assert _nerr(got_hvp, want_hvp) < 1e-6
+
+    got_diag = p.diag(params, key)
+    want_diag = jax.jit(lambda a, k: hutchinson_diag(
+        tgt.loss, a, k, n_probes=N_PROBES, csize=CSIZE))(params, key)
+    assert _nerr(got_diag, want_diag) < 1e-6
+
+    got_ggn = p.ggn(params, v)
+    want_ggn = jax.jit(lambda a, vv: ggn_hvp(
+        tgt.model_fn, tgt.head_loss, a, vv))(params, v)
+    assert _nerr(got_ggn, want_ggn) < 1e-6
+
+    # zero retraces: re-planning the same signature and re-executing every
+    # workload must not trace again (process-wide executable cache)
+    counts = {w: engine.trace_count(p.cache_key(w, "pytree_fwdrev"))
+              for w in ("hvp", "diag", "ggn")}
+    assert all(c == 1 for c in counts.values()), counts
+    p2 = engine.plan(tgt.loss, None, csize=CSIZE,
+                     backend="pytree_fwdrev", options=dict(opts))
+    p2.hvp(params, v)
+    p2.diag(params, key)
+    p2.ggn(params, v)
+    for w, c in counts.items():
+        assert engine.trace_count(p2.cache_key(w, "pytree_fwdrev")) == c
+
+
+def test_zoo_fisher_parity_and_kv_policy():
+    """Fisher route parity on one arch, plus the end-to-end curvature ->
+    KV-cache quantization policy pipeline."""
+    cfg, tgt, params, p, _ = _case("qwen1.5-4b")
+    v = jax.tree.map(lambda l: jnp.full(l.shape, 0.01, l.dtype), params)
+    got = p.fisher(params, v)
+    want = jax.jit(lambda a, vv: empirical_fisher_vp(
+        tgt.per_example_fn, a, vv))(params, v)
+    assert _nerr(got, want) < 1e-6
+
+    spectrum = diag_spectrum(p.diag(params, jax.random.PRNGKey(5)))
+    sens = kv_sensitivity(spectrum)
+    assert sorted(sens) == list(range(cfg.num_layers))
+    policy = choose_kv_cache_dtype(sens, int8_budget_frac=0.5)
+    assert set(policy.values()) <= {"int8", "bfloat16"}
+    assert list(policy.values()).count("int8") == cfg.num_layers // 2
