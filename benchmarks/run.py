@@ -22,6 +22,7 @@ SUITES = {
     "optimizer": "benchmarks.optimizer_compare",  # SophiaH/CHESSFAD vs AdamW
     "engine": "benchmarks.engine_bench",    # plan/execute csize selection
     "service": "benchmarks.service_bench",  # async coalescing throughput
+    "selftune": "benchmarks.selftune_bench",  # online bucket-aware autotune
     "distributed": "benchmarks.distributed_bench",  # L1 rows vs mesh shape
     "zoo": "benchmarks.zoo_bench",          # pytree workloads on zoo configs
 }

@@ -1,0 +1,19 @@
+"""Self-tuning service suite (PR 8): open-loop Poisson load shift through
+a static vs a self-tuning CurvatureService, convergence witness vs the
+best offline-swept config.  Implementation lives in
+``benchmarks.service_bench.run_selftune``; this module is the
+``benchmarks.run`` suite entry (``--only selftune``) so CI can run the
+online-tuning acceptance without re-running the coalescing throughput
+sweep."""
+
+from __future__ import annotations
+
+from benchmarks.service_bench import run_selftune
+
+
+def main(quick: bool = False):
+    run_selftune(quick=quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,17 @@ branches, not untangling exception flow.
              (older: ``jax.experimental.shard_map.shard_map``)
   >= 0.7.0 : the replication-check keyword is ``check_vma``
              (older: ``check_rep``)
+
+Re-verified 2026-08 against the container toolchain (jax 0.4.37): every
+legacy branch is the live one there -- ``jax.experimental.shard_map`` with
+``check_rep``, ``jax.make_mesh`` without ``axis_types``,
+``jax.sharding.AxisType`` absent -- and the modern branches are exercised
+by tests/test_compat.py through monkeypatched gates.  The old ``make_mesh``
+double-probe ("axis_types accepted but AxisType missing") was dead on every
+version either way (the keyword and the enum shipped together; a
+``make_mesh`` accepting ``axis_types`` with no enum to pass is not a real
+jax) and is now folded into the single import-time
+``MAKE_MESH_HAS_AXIS_TYPES`` gate.
 """
 
 from __future__ import annotations
@@ -28,7 +39,8 @@ import inspect
 import jax
 
 __all__ = ["shard_map", "make_mesh", "auto_axis_types", "jax_version",
-           "SHARD_MAP_IS_PUBLIC", "REP_CHECK_KW"]
+           "SHARD_MAP_IS_PUBLIC", "REP_CHECK_KW",
+           "MAKE_MESH_HAS_AXIS_TYPES"]
 
 
 def jax_version(version: str | None = None) -> tuple:
@@ -61,6 +73,13 @@ else:
 
 _MAKE_MESH_PARAMS = inspect.signature(jax.make_mesh).parameters
 
+# One import-time capability gate: the axis_types keyword and the AxisType
+# enum shipped together, so probing both collapses to a single constant
+# (on 0.4.37 both probes are False; see the module docstring).
+MAKE_MESH_HAS_AXIS_TYPES = (
+    "axis_types" in _MAKE_MESH_PARAMS
+    and getattr(jax.sharding, "AxisType", None) is not None)
+
 
 def auto_axis_types(n_axes: int):
     """(AxisType.Auto,) * n_axes on jax versions that have axis types,
@@ -74,11 +93,9 @@ def auto_axis_types(n_axes: int):
 def make_mesh(axis_shapes, axis_names, **kw):
     """jax.make_mesh accepting ``axis_types`` on every jax version (the
     keyword is dropped where unsupported; Auto is the legacy behavior)."""
-    if "axis_types" in _MAKE_MESH_PARAMS:
+    if MAKE_MESH_HAS_AXIS_TYPES:
         if kw.get("axis_types") is None:
             kw["axis_types"] = auto_axis_types(len(tuple(axis_names)))
-        if kw.get("axis_types") is None:  # AxisType absent: drop the kw
-            kw.pop("axis_types", None)
     else:
         kw.pop("axis_types", None)
     return jax.make_mesh(axis_shapes, axis_names, **kw)

@@ -99,20 +99,26 @@ def eval_chunk(f, a, i, cstart, csize: int):
 # full Hessian (Alg. 5 / Alg. 6)
 # ---------------------------------------------------------------------------
 
-def hessian_impl(f, a, csize: int = 1, symmetric: bool = True):
+def hessian_impl(f, a, csize: int = 1, symmetric: bool = True,
+                 compute_dtype=None):
     """Raw dense-Hessian schedule (no jit -- the engine compiles/caches).
 
     L1 x L2 parallelism: a single vmap over the flat (row, chunk) pair list --
     every Hessian chunk is an independent program instance, exactly the
     paper's "rows are independent; chunks within a row are independent".
+    ``compute_dtype`` casts the tangent sweeps (see ``hvp_impl``); the
+    scatter accumulation stays in ``a.dtype``.
     """
     a = jnp.asarray(a)
     n = a.shape[-1]
+    ac = a.astype(compute_dtype) if compute_dtype is not None else a
     pairs = chunk_pairs(n, csize, symmetric)
     rows = jnp.asarray(pairs[:, 0])
     starts = jnp.asarray(pairs[:, 1])
 
-    chunks = jax.vmap(lambda i, c: eval_chunk(f, a, i, c, csize).dij)(rows, starts)
+    chunks = jax.vmap(
+        lambda i, c: eval_chunk(f, ac, i, c, csize).dij)(rows, starts)
+    chunks = chunks.astype(a.dtype)
     # scatter chunks into the dense matrix
     cols = starts[:, None] + jnp.arange(csize)[None, :]          # (P, c)
     valid = cols < n                                              # ragged tail guard
@@ -150,25 +156,33 @@ def gradient(f, a, csize: int = 8):
 # Hessian-vector product (Alg. 7 / Alg. 8)
 # ---------------------------------------------------------------------------
 
-def hvp_impl(f, a, v, csize: int = 1, symmetric: bool = True):
+def hvp_impl(f, a, v, csize: int = 1, symmetric: bool = True,
+             compute_dtype=None):
     """Raw HVP schedule: r = H(a) @ v without materializing H.
 
     Chunks are computed, dotted against v, and discarded (paper §3.3). With
     symmetric=True the below-diagonal chunks are never evaluated; each
     strictly-above chunk element H[i,j] also contributes H[i,j]*v[i] to r[j]
     (Alg. 8 lines 12-15).
+
+    ``compute_dtype`` runs the hDual tangent sweeps in a reduced (or
+    widened) dtype -- the seed point is cast before chunk evaluation, so
+    every dual component carries that dtype -- while the dot-and-scatter
+    accumulation stays in ``a.dtype`` (bf16 tangents, fp32 accumulation).
     """
     a = jnp.asarray(a)
     v = jnp.asarray(v)
     n = a.shape[-1]
+    acc_dt = a.dtype
+    ac = a.astype(compute_dtype) if compute_dtype is not None else a
     pairs = chunk_pairs(n, csize, symmetric)
     rows = jnp.asarray(pairs[:, 0])
     starts = jnp.asarray(pairs[:, 1])
 
     def one(i, cstart):
-        return eval_chunk(f, a, i, cstart, csize).dij    # (c,)
+        return eval_chunk(f, ac, i, cstart, csize).dij   # (c,)
 
-    chunks = jax.vmap(one)(rows, starts)                  # (P, c)
+    chunks = jax.vmap(one)(rows, starts).astype(acc_dt)   # (P, c)
     cols = starts[:, None] + jnp.arange(csize)[None, :]   # (P, c)
     valid = cols < n
     cols_c = jnp.minimum(cols, n - 1)
@@ -187,13 +201,16 @@ def hvp_impl(f, a, v, csize: int = 1, symmetric: bool = True):
 # ---------------------------------------------------------------------------
 
 def batched_hvp_impl(f, A, V, csize: int = 1, level: str = "L2",
-                     symmetric: bool = False):
+                     symmetric: bool = False, compute_dtype=None):
     """Raw batched-HVP schedules for m instances: A, V are (m, n).
 
     level="L0": one program per instance; rows+chunks sequential (lax.scan)
                 inside -- mirrors Alg. 9's thread-per-instance.
     level="L1": rows also batched (vmap) -- Alg. 10's thread-per-(instance,row).
     level="L2": rows x chunks fully batched + segment reduction -- Fig. 2.
+
+    ``compute_dtype`` runs the hDual chunk sweeps in that dtype while the
+    per-row dot accumulation stays in ``A.dtype`` (see ``hvp_impl``).
 
     On TPU the batched axes become one flat parallel dimension; the benchmark
     suite (benchmarks/gpu_levels.py) reproduces the paper's Figs. 10-12 by
@@ -204,39 +221,43 @@ def batched_hvp_impl(f, A, V, csize: int = 1, level: str = "L2",
     A = jnp.asarray(A)
     V = jnp.asarray(V)
     n = A.shape[-1]
+    acc_dt = A.dtype
     nc = _nchunk(n, csize)
     starts_np = np.arange(nc, dtype=np.int32) * csize
 
     if level == "L2":
-        fn = partial(hvp_impl, f, csize=csize, symmetric=symmetric)
+        fn = partial(hvp_impl, f, csize=csize, symmetric=symmetric,
+                     compute_dtype=compute_dtype)
         return jax.vmap(lambda a, v: fn(a, v))(A, V)
 
-    def row_hvp(a, v, i):
+    Ac = A.astype(compute_dtype) if compute_dtype is not None else A
+
+    def row_hvp(ac, v, i):
         """Sequential chunk sweep for row i (Alg. 9 inner loop)."""
         def body(res, cstart):
-            dij = eval_chunk(f, a, i, cstart, csize).dij
+            dij = eval_chunk(f, ac, i, cstart, csize).dij.astype(acc_dt)
             cols = cstart + jnp.arange(csize)
             ok = cols < n
             res = res + jnp.sum(jnp.where(ok, dij * v[jnp.minimum(cols, n - 1)], 0.0))
             return res, None
 
-        res, _ = jax.lax.scan(body, jnp.zeros((), a.dtype),
+        res, _ = jax.lax.scan(body, jnp.zeros((), acc_dt),
                               jnp.asarray(starts_np))
         return res
 
     if level == "L1":
-        def inst(a, v):
-            return jax.vmap(lambda i: row_hvp(a, v, i))(jnp.arange(n))
-        return jax.vmap(inst)(A, V)
+        def inst(ac, v):
+            return jax.vmap(lambda i: row_hvp(ac, v, i))(jnp.arange(n))
+        return jax.vmap(inst)(Ac, V)
 
     # L0: rows sequential too
-    def inst(a, v):
+    def inst(ac, v):
         def body(_, i):
-            return None, row_hvp(a, v, i)
+            return None, row_hvp(ac, v, i)
         _, out = jax.lax.scan(body, None, jnp.arange(n))
         return out
 
-    return jax.vmap(inst)(A, V)
+    return jax.vmap(inst)(Ac, V)
 
 
 # ---------------------------------------------------------------------------

@@ -31,7 +31,8 @@ from repro.engine.registry import BackendSpec, register_backend
 
 __all__ = ["pytree_hvp", "pytree_hvp_fwd", "hutchinson_diag",
            "rademacher_like", "block_hessian",
-           "ggn_hvp", "ggn_diag", "empirical_fisher_vp"]
+           "ggn_hvp", "ggn_diag", "empirical_fisher_vp",
+           "hutchinson_diag_budgeted", "ggn_diag_budgeted"]
 
 
 def pytree_hvp(f, params, v):
@@ -145,6 +146,78 @@ def ggn_diag(model_fn, head_loss, params, key, n_probes: int = 4,
     return jax.tree.map(lambda e: e.mean(0), ests)
 
 
+def _chunked_budgeted(vp, params, key, n_probes: int, csize: int, p):
+    """Probe-chunk Hutchinson estimate honoring a per-request budget ``p``
+    (a traced int, 1 <= p <= n_probes): the estimate averages only the
+    FIRST p probes of the same key-derived probe sequence a full-budget
+    call would draw.
+
+    Two invariants make this coalescible with full-budget requests in one
+    bucket:
+      - the probe sequence (key splitting, Rademacher draws) is identical
+        to the unbudgeted path, so every request in a bucket shares one
+        program over the same chunk grid (n_probes/csize chunks), and
+      - at p == n_probes the returned value is computed by the EXACT op
+        sequence of ``hutchinson_diag``/``ggn_diag`` (nested per-chunk
+        means), selected via ``where`` -- a capped request's result is
+        bitwise what the point function returns.
+    Probe-chunk scheduling: each chunk masks its members with global probe
+    index < p, so partial budgets pay no extra chunk sweeps."""
+    assert n_probes % csize == 0, (n_probes, csize)
+    nchunk = n_probes // csize
+    p = jnp.asarray(p)
+
+    def chunk_vals(j, key_c):
+        keys = jax.random.split(key_c, csize)
+        probes = jax.vmap(lambda k: rademacher_like(k, params))(keys)
+        hvs = jax.vmap(vp)(probes)
+        contrib = jax.tree.map(lambda v, hv: v * hv, probes, hvs)
+        full = jax.tree.map(lambda c: c.mean(0), contrib)
+        mask = (j * csize + jnp.arange(csize)) < p
+        msum = jax.tree.map(
+            lambda c: jnp.sum(
+                jnp.where(mask.reshape((csize,) + (1,) * (c.ndim - 1)),
+                          c, 0), axis=0),
+            contrib)
+        return full, msum
+
+    fulls, msums = jax.vmap(chunk_vals)(
+        jnp.arange(nchunk), jax.random.split(key, nchunk))
+    full = jax.tree.map(lambda e: e.mean(0), fulls)
+    budgeted = jax.tree.map(lambda s: s.sum(0) / p, msums)
+    return jax.tree.map(lambda a, b: jnp.where(p >= n_probes, a, b),
+                        full, budgeted)
+
+
+def hutchinson_diag_budgeted(f, params, key, p, n_probes: int = 4,
+                             csize: int = 4):
+    """``hutchinson_diag`` honoring a per-request probe budget ``p`` (traced
+    int <= n_probes): averages the first p probes of the full-budget key
+    sequence; equals ``hutchinson_diag(f, params, key, n_probes, csize)``
+    exactly at p == n_probes.  This is what the CurvatureService's
+    ``batched_diag`` executable vmaps, so requests with different budgets
+    coalesce into one bucket program."""
+    assert n_probes % csize == 0, (n_probes, csize)
+    _, hvp_lin = jax.linearize(jax.grad(f), params)
+    return _chunked_budgeted(hvp_lin, params, key, n_probes, csize, p)
+
+
+def ggn_diag_budgeted(model_fn, head_loss, params, key, p,
+                      n_probes: int = 4, csize: int = 4):
+    """``ggn_diag`` honoring a per-request probe budget ``p`` (see
+    ``hutchinson_diag_budgeted``)."""
+    assert n_probes % csize == 0, (n_probes, csize)
+    z, lin = jax.linearize(model_fn, params)
+    lin_t = jax.linear_transpose(lin, params)
+    head_grad = jax.grad(head_loss)
+
+    def gvp(vp):
+        HJv = jax.jvp(head_grad, (z,), (lin(vp),))[1]
+        return lin_t(_match_dtypes(HJv, z))[0]
+
+    return _chunked_budgeted(gvp, params, key, n_probes, csize, p)
+
+
 def empirical_fisher_vp(per_example_fn, params, v):
     """Empirical Fisher-vector product  F v = (1/B) Σ_b g_b (g_b · v).
 
@@ -252,6 +325,28 @@ def _pytree_diag_fn(plan):
         f, params, key, n_probes=n_probes, csize=plan.csize)
 
 
+def _pytree_diag_budgeted_fn(plan):
+    """The budget-honoring diag callable (params, key, p) for a plan --
+    the ``batched_diag`` per-row function (see ``_chunked_budgeted`` for
+    the coalescing/exactness contract with ``_pytree_diag_fn``)."""
+    f = plan.f
+    n_probes = int(plan.opt("n_probes", 4))
+    if n_probes % max(plan.csize, 1) != 0:
+        raise ValueError(
+            f"diag workload needs csize | n_probes; got csize="
+            f"{plan.csize}, n_probes={n_probes}")
+    diag_of = plan.opt("diag_of", "hessian")
+    if diag_of == "ggn":
+        mf, hl = plan.opt("model_fn"), plan.opt("head_loss")
+        return lambda params, key, p: ggn_diag_budgeted(
+            mf, hl, params, key, p, n_probes=n_probes, csize=plan.csize)
+    if diag_of != "hessian":
+        raise ValueError(
+            f"diag_of must be 'hessian' or 'ggn', got {diag_of!r}")
+    return lambda params, key, p: hutchinson_diag_budgeted(
+        f, params, key, p, n_probes=n_probes, csize=plan.csize)
+
+
 def _pytree_fwdrev_make(plan, workload):
     f = plan.f
     if workload == "hvp":
@@ -277,12 +372,15 @@ def _pytree_fwdrev_make(plan, workload):
         return lambda A, V: jax.vmap(one_hvp)(A, V)
     if workload == "batched_diag":
         spec = plan.opt("pytree_spec")
-        point = _pytree_diag_fn(plan)
+        point = _pytree_diag_budgeted_fn(plan)
 
-        def one_diag(a_row, key_row):
-            return spec.ravel_traced(point(spec.unravel(a_row), key_row))
+        def one_diag(a_row, key_row, p):
+            return spec.ravel_traced(point(spec.unravel(a_row), key_row, p))
 
-        return lambda A, K: jax.vmap(one_diag)(A, K)
+        # (A, K, P): raveled param rows, PRNG-key rows, per-request probe
+        # budgets (int32, <= the plan's n_probes) -- the service honors each
+        # request's n_probes= without splitting the bucket
+        return lambda A, K, P: jax.vmap(one_diag)(A, K, P)
     raise KeyError(workload)
 
 

@@ -49,7 +49,16 @@ Serving: ``plan.submit(a, v)`` routes through the process-wide
 single-point requests into padded power-of-two micro-batches executed by
 the same cached executables -- ``max_batch`` / ``max_wait_us`` are the
 latency/throughput dial.  Every executed bucket reports measured us/point
-to the registry telemetry (``execution_stats()``).
+to the registry telemetry (``execution_stats()`` /
+``bucket_telemetry()``).  A service constructed with
+``retune_interval_s`` closes the loop online: a background thread
+watches the observed bucket mix and drift, re-runs the joint
+``autotune_buckets`` sweep (csize, backend, blk_m, dtype_policy --
+bf16 duals are accuracy-gated by ``verify_dtype_policy`` and rejected,
+never silently kept) against the live bucket sizes, hot-swaps per-bucket
+executables with zero dropped requests, and re-fits ``max_batch`` /
+``max_wait_us`` from the measured arrival rate
+(``suggest_dispatch_knobs``).
 
 Narrative docs: docs/architecture.md (plan/execute + service lifecycle),
 docs/backends.md (capability matrix), docs/workloads.md (workload-kind
@@ -61,7 +70,8 @@ from .plan import (CurvaturePlan, plan, clear_cache, trace_count,
                    cache_size, bucket_size, pad_rows)
 from .registry import (BackendSpec, register_backend, get_backend,
                        list_backends, resolve_backend, WORKLOADS,
-                       record_execution, execution_stats, clear_telemetry)
+                       record_execution, execution_stats, clear_telemetry,
+                       DTYPE_POLICIES, bucket_telemetry)
 from .opmodel import (model_csize, csize_candidates,
                       pruned_csize_candidates, mults_chunk_hess,
                       mults_schunk_hess, count_jaxpr_ops, LANE_WIDTH,
@@ -70,7 +80,11 @@ from .opmodel import (model_csize, csize_candidates,
 from .pytree import PytreeSpec, spec_of
 from .autotune import (autotune, autotune_csize, clear_autotune_cache,
                        TunedConfig, function_fingerprint, lookup_tuned,
-                       probe_count, store_path, load_store, save_store)
+                       probe_count, store_path, load_store, save_store,
+                       autotune_buckets, BucketTunedConfig,
+                       apply_bucket_config, verify_dtype_policy,
+                       DtypePolicyRejected)
+from .opmodel import suggest_dispatch_knobs
 from .service import (CurvatureService, ServiceClosed, ServiceQueueFull,
                       get_service, configure_service, shutdown_service)
 
@@ -88,6 +102,9 @@ __all__ = [
     "autotune", "autotune_csize", "clear_autotune_cache", "TunedConfig",
     "function_fingerprint", "lookup_tuned", "probe_count",
     "store_path", "load_store", "save_store",
+    "autotune_buckets", "BucketTunedConfig", "apply_bucket_config",
+    "verify_dtype_policy", "DtypePolicyRejected", "DTYPE_POLICIES",
+    "suggest_dispatch_knobs", "bucket_telemetry",
     "CurvatureService", "ServiceClosed", "ServiceQueueFull",
     "get_service", "configure_service", "shutdown_service",
 ]

@@ -58,6 +58,8 @@ __all__ = [
     "autotune", "autotune_csize", "clear_autotune_cache", "TunedConfig",
     "function_fingerprint", "lookup_tuned", "probe_count",
     "store_path", "load_store", "save_store",
+    "autotune_buckets", "BucketTunedConfig", "apply_bucket_config",
+    "verify_dtype_policy", "DtypePolicyRejected", "DEFAULT_DTYPE_TOL",
 ]
 
 _TUNABLE_WORKLOADS = ("batched_hvp", "hvp", "hessian", "diag")
@@ -107,6 +109,22 @@ class TunedConfig:
     blk_m: Optional[int]
     time_s: float
     source: str                     # "sweep" | "memory" | "disk"
+    dtype_policy: str = "fp32"      # dual dtype (registry.DTYPE_POLICIES)
+
+
+# normalized-L2 error budget for a reduced-precision dual policy, checked
+# against the fwd-fwd oracle.  bf16 carries ~8 mantissa bits (eps ~ 7.8e-3);
+# a chunked HVP accumulates a few of those, so 5e-2 accepts healthy bf16
+# tangents while anything structurally wrong (catastrophic cancellation,
+# ill-conditioned f) lands orders of magnitude above it.  Plans override
+# via the ``dtype_tol`` option.
+DEFAULT_DTYPE_TOL = 5e-2
+
+
+class DtypePolicyRejected(ValueError):
+    """A reduced-precision dual policy exceeded the plan's oracle-error
+    tolerance.  Raised (never silently kept) on explicit verification; the
+    sweep records the rejection and falls back to exact duals."""
 
 
 def probe_count() -> int:
@@ -346,20 +364,27 @@ def _cfg_from_entry(entry, source: str) -> Optional[TunedConfig]:
                            backend=str(entry["backend"]),
                            blk_m=int(blk_m) if blk_m else None,
                            time_s=float(entry.get("time_s", 0.0)),
-                           source=source)
+                           source=source,
+                           dtype_policy=str(entry.get("dtype_policy",
+                                                      "fp32")))
     except (KeyError, TypeError, ValueError):
         return None
 
 
-def _persist(skey: str, cfg: TunedConfig) -> None:
+def _persist(skey: str, cfg: TunedConfig, extra: Optional[dict] = None) -> None:
     load_store()                    # ensure snapshot loaded for this path
     with _LOCK:
         if _DISK is None:
             return
-        _DISK[skey] = {"csize": cfg.csize, "backend": cfg.backend,
-                       "blk_m": cfg.blk_m, "time_s": round(cfg.time_s, 6),
-                       "jax": jax.__version__,
-                       "saved_at": round(time.time(), 1)}
+        entry = {"csize": cfg.csize, "backend": cfg.backend,
+                 "blk_m": cfg.blk_m, "time_s": round(cfg.time_s, 6),
+                 "jax": jax.__version__,
+                 "saved_at": round(time.time(), 1)}
+        if cfg.dtype_policy != "fp32":
+            entry["dtype_policy"] = cfg.dtype_policy
+        if extra:
+            entry.update(extra)
+        _DISK[skey] = entry
     save_store()
 
 
@@ -725,3 +750,292 @@ def autotune_csize(f, n: int, m=None, symmetric: bool = False,
     return autotune(f, n, m=m, symmetric=symmetric, backend=backend,
                     mesh=mesh, options=options, workload=workload,
                     probe_m=probe_m, reps=reps, seed=seed).csize
+
+
+# ---------------------------------------------------------------------------
+# dtype-policy guardrail (the fwd-fwd oracle accuracy assertion)
+# ---------------------------------------------------------------------------
+
+def verify_dtype_policy(plan, workload: str = "batched_hvp", m: int = 8,
+                        seed: int = 0, tol: Optional[float] = None,
+                        raise_on_reject: bool = True) -> float:
+    """Normalized L2 error of a plan's dual dtype policy against the
+    forward-over-forward oracle on a synthetic probe batch.
+
+    The oracle runs the SAME f at the same points through the reference
+    backend in full input precision; the candidate runs the plan's own
+    configuration (backend, csize, policy).  Error above ``tol`` (default:
+    the plan's ``dtype_tol`` option, else ``DEFAULT_DTYPE_TOL``) raises
+    ``DtypePolicyRejected`` -- a too-lossy policy is rejected, never
+    silently kept.  Returns the measured error (0.0 for the exact "fp32"
+    policy, which needs no probe)."""
+    policy = plan.opt("dtype_policy", "fp32")
+    if policy == "fp32":
+        return 0.0
+    if tol is None:
+        tol = float(plan.opt("dtype_tol", DEFAULT_DTYPE_TOL))
+    if plan.n is None:
+        raise ValueError("dtype policies apply to flat (hDual) plans")
+    from .plan import plan as make_plan
+    n = int(plan.n)
+    rng = np.random.RandomState(seed)
+    A = np.asarray(rng.uniform(-2, 2, (int(m), n)), np.float32)
+    V = np.asarray(rng.randn(int(m), n), np.float32)
+    # the oracle plan drops the policy (and the pallas block dial): exact
+    # duals through the reference backend
+    clean = tuple(sorted((k, v) for k, v in plan.options
+                         if k not in ("dtype_policy", "blk_m")))
+    oracle = make_plan(plan.f, n, m=int(m), csize=1,
+                       symmetric=plan.symmetric, backend="reference",
+                       options=dict(clean))
+    if workload in ("batched_hvp", "hvp"):
+        out = plan.batched_hvp(A, V)
+        ref = oracle.batched_hvp(A, V)
+    elif workload in ("batched_hessian", "hessian"):
+        out = plan.batched_hessian(A)
+        ref = oracle.batched_hessian(A)
+    else:
+        raise ValueError(f"cannot verify dtype policy for {workload!r}")
+    out = np.asarray(jax.block_until_ready(out), np.float64)
+    ref = np.asarray(jax.block_until_ready(ref), np.float64)
+    err = float(np.linalg.norm(out - ref) / (np.linalg.norm(ref) + 1e-30))
+    if raise_on_reject and not err <= tol:
+        raise DtypePolicyRejected(
+            f"dtype_policy={policy!r} rejected for "
+            f"{getattr(plan.f, '__name__', plan.f)!r} (n={n}): normalized "
+            f"oracle error {err:.3e} exceeds tolerance {tol:.3e}")
+    return err
+
+
+# ---------------------------------------------------------------------------
+# the online bucket-aware tuner (the service's steady-state controller)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BucketTunedConfig:
+    """The joint winner for ONE observed service bucket: configuration plus
+    its measured us/point at exactly that batch shape.  ``rejected`` lists
+    (policy, error) pairs the oracle guardrail refused during this sweep."""
+    bucket: int
+    csize: int
+    backend: str
+    blk_m: Optional[int]
+    dtype_policy: str
+    us_per_point: float
+    source: str                     # "sweep" | "disk"
+    rejected: tuple = ()
+
+
+def apply_bucket_config(base_plan, cfg: BucketTunedConfig):
+    """The executable plan a bucket winner denotes: the base plan with the
+    tuned csize/backend and the tuned blk_m / dtype_policy options.
+
+    Built EXACTLY like the tuner's own probe plans, so the derived plan's
+    cache key equals the probed plan's key -- the winning executable is
+    already compiled at the bucket shape when the service hot-swaps to it
+    (zero added latency on the first post-swap dispatch)."""
+    import dataclasses
+    opts = {k: v for k, v in base_plan.options
+            if k not in ("blk_m", "dtype_policy")}
+    if cfg.blk_m:
+        opts["blk_m"] = int(cfg.blk_m)
+    if cfg.dtype_policy and cfg.dtype_policy != "fp32":
+        opts["dtype_policy"] = cfg.dtype_policy
+    return dataclasses.replace(base_plan, csize=int(cfg.csize),
+                               backend=cfg.backend,
+                               options=tuple(sorted(opts.items())))
+
+
+def _bucket_store_key(fp: str, n: int, workload: str, symmetric: bool,
+                      bucket: int, backend: str, include_pallas: bool) -> str:
+    # "svc" marks per-bucket online winners: same store file, disjoint key
+    # space from the offline probe-m records (whose m is _probe_m-clamped,
+    # not an observed bucket)
+    return _store_key(fp, n, workload, symmetric, int(bucket), backend,
+                      _platform(), include_pallas) + "|svc"
+
+
+def _bucket_cfg_from_entry(entry, bucket: int) -> Optional[BucketTunedConfig]:
+    if not isinstance(entry, dict):
+        return None
+    cfg = _cfg_from_entry(entry, "disk")
+    if cfg is None:
+        return None
+    return BucketTunedConfig(
+        bucket=int(bucket), csize=cfg.csize, backend=cfg.backend,
+        blk_m=cfg.blk_m, dtype_policy=cfg.dtype_policy,
+        us_per_point=float(entry.get("us_per_point", 0.0)), source="disk")
+
+
+def autotune_buckets(f, n: int, buckets, *, symmetric: bool = False,
+                     backend: str = "auto", options=(),
+                     workload: str = "batched_hvp", reps: int = 3,
+                     seed: int = 0, deadline_s: Optional[float] = None,
+                     rep_deadline_s: Optional[float] = 0.25,
+                     include_pallas: Optional[bool] = None,
+                     dtype_policies=None, use_store: bool = True,
+                     force: bool = False) -> dict:
+    """Joint (csize, backend, blk_m, dtype_policy) sweep at the OBSERVED
+    service bucket sizes -- the online half of the tuner.
+
+    ``buckets`` is an iterable of bucket sizes or a ``{bucket: weight}``
+    traffic mix; heavier buckets are swept first and get a proportional
+    share of ``deadline_s``.  Each bucket's candidates execute at exactly
+    (bucket, n) -- the shape the service dispatches -- so the objective is
+    the real per-bucket us/point, not an offline probe-m proxy, and the
+    winning executable is left compiled at the serving shape.
+
+    The dtype-policy axis defaults to ("fp32", "bf16") (plus nothing else:
+    "fp64" widens and is only swept when explicitly listed); every
+    non-exact policy is pre-verified against the fwd-fwd oracle under the
+    plan's ``dtype_tol`` and REJECTED from the grid on failure (recorded in
+    the returned configs' ``rejected``).  A policy pinned in ``options``
+    is honored but still verified -- failing the guard raises
+    ``DtypePolicyRejected``.
+
+    Winners persist per (fingerprint, n, workload, symmetric, bucket,
+    backend, platform) in the same JSON store as the offline tuner (key
+    suffix "svc"): a fresh service warm-starts its per-bucket hot-swap map
+    with zero probes.  ``force=True`` ignores stored winners (the drift
+    re-tune path) and overwrites them with fresh measurements.
+
+    Returns ``{bucket: BucketTunedConfig}``."""
+    from .plan import plan as make_plan
+    from .registry import get_backend
+
+    if workload not in ("batched_hvp", "batched_hessian"):
+        raise ValueError(
+            f"autotune_buckets serves the coalesced flat workloads "
+            f"(batched_hvp, batched_hessian), not {workload!r}")
+    n = int(n)
+    options = tuple(sorted(dict(options).items()))
+    opts_d = dict(options)
+    if isinstance(buckets, dict):
+        mix = {int(b): float(w) for b, w in buckets.items() if w > 0}
+    else:
+        mix = {int(b): 1.0 for b in buckets}
+    if not mix or min(mix) < 1:
+        raise ValueError(f"buckets must be positive sizes, got {buckets!r}")
+    total_w = sum(mix.values())
+    order = sorted(mix, key=lambda b: (-mix[b], b))
+    fp = function_fingerprint(f)
+    if include_pallas is None:
+        include_pallas = jax.default_backend() == "tpu"
+    include_pallas = bool(include_pallas)
+
+    pinned_policy = opts_d.get("dtype_policy")
+    if dtype_policies is None:
+        dtype_policies = (pinned_policy,) if pinned_policy else \
+            ("fp32", "bf16")
+    dtype_policies = tuple(dtype_policies)
+
+    out: dict = {}
+    to_sweep = []
+    for b in order:
+        skey = _bucket_store_key(fp, n, workload, symmetric, b, backend,
+                                 include_pallas)
+        if use_store and not force and _persist_enabled():
+            cfg = _bucket_cfg_from_entry(load_store().get(skey, None), b)
+            if cfg is not None and _feasible(cfg, workload):
+                out[b] = cfg
+                continue
+        to_sweep.append((b, skey))
+    if not to_sweep:
+        return out
+
+    # oracle guardrail, once per call on the heaviest swept bucket: the
+    # policy's error is a property of (f, dtype), not of the batch shape
+    rejected = []
+    kept_policies = []
+    guard_b = to_sweep[0][0]
+    for pol in dtype_policies:
+        if pol in (None, "fp32"):
+            kept_policies.append("fp32")
+            continue
+        try:
+            probe = make_plan(f, n, m=guard_b, csize=1, backend="auto",
+                              symmetric=symmetric,
+                              options={**{k: v for k, v in opts_d.items()
+                                          if k != "blk_m"},
+                                       "dtype_policy": pol})
+            err = verify_dtype_policy(probe, workload=workload, m=guard_b,
+                                      seed=seed, raise_on_reject=False)
+        except Exception as e:
+            if pol == pinned_policy:
+                raise
+            rejected.append((pol, float("inf")))
+            continue
+        tol = float(opts_d.get("dtype_tol", DEFAULT_DTYPE_TOL))
+        if err <= tol:
+            kept_policies.append(pol)
+        else:
+            rejected.append((pol, err))
+            if pol == pinned_policy:
+                raise DtypePolicyRejected(
+                    f"pinned dtype_policy={pol!r} rejected for "
+                    f"{getattr(f, '__name__', f)!r} (n={n}): error "
+                    f"{err:.3e} > tolerance {tol:.3e}")
+    rejected = tuple(rejected)
+    if not kept_policies:
+        kept_policies = ["fp32"]
+
+    rng = np.random.RandomState(seed)
+    w_sweep = sum(mix[b] for b, _ in to_sweep) or 1.0
+    for b, skey in to_sweep:
+        budget = (deadline_s * mix[b] / w_sweep
+                  if deadline_s is not None else None)
+        A = np.asarray(rng.uniform(-2, 2, (b, n)), np.float32)
+        V = np.asarray(rng.randn(b, n), np.float32)
+        best = None
+        last_err = None
+        t_sweep = time.perf_counter()
+        for bk, c, bm in _combo_grid(fp, n, b, symmetric, backend, None,
+                                     workload, include_pallas,
+                                     pinned_blk_m=opts_d.get("blk_m"),
+                                     options=options):
+            if (budget is not None and best is not None
+                    and time.perf_counter() - t_sweep >= budget):
+                break
+            try:
+                bk_policies = [p for p in kept_policies
+                               if p == "fp32"
+                               or p in get_backend(bk).dtype_policies]
+            except Exception:
+                bk_policies = ["fp32"]
+            for pol in bk_policies:
+                opts = {k: v for k, v in opts_d.items()
+                        if k not in ("dtype_policy",)}
+                if bm is not None:
+                    opts["blk_m"] = bm
+                if pol != "fp32":
+                    opts["dtype_policy"] = pol
+                try:
+                    p = make_plan(f, n, m=b, csize=c, backend=bk,
+                                  symmetric=symmetric, options=opts)
+                    if workload == "batched_hvp":
+                        run = lambda: p.batched_hvp(A, V)
+                    else:
+                        run = lambda: p.batched_hessian(A)
+                    t = _time_once(run, reps=reps,
+                                   deadline_s=rep_deadline_s)
+                except Exception as e:
+                    last_err = e
+                    continue
+                us_pp = t / b * 1e6
+                if best is None or us_pp < best.us_per_point:
+                    best = BucketTunedConfig(
+                        bucket=b, csize=c, backend=bk, blk_m=bm,
+                        dtype_policy=pol, us_per_point=us_pp,
+                        source="sweep", rejected=rejected)
+        if best is None:
+            raise RuntimeError(
+                f"autotune_buckets: no candidate ran for n={n}, "
+                f"bucket={b}, backend={backend!r}") from last_err
+        out[b] = best
+        if use_store and _persist_enabled():
+            _persist(skey, TunedConfig(
+                csize=best.csize, backend=best.backend, blk_m=best.blk_m,
+                time_s=best.us_per_point * b / 1e6, source="sweep",
+                dtype_policy=best.dtype_policy),
+                extra={"us_per_point": round(best.us_per_point, 4)})
+    return out

@@ -12,7 +12,8 @@ import jax
 
 from repro.core import api, ref
 
-from .registry import BackendSpec, register_backend
+from .registry import (BackendSpec, DTYPE_POLICIES, policy_compute_dtype,
+                       register_backend)
 
 _ALL = frozenset({"hvp", "hessian", "batched_hvp", "batched_hessian"})
 
@@ -46,14 +47,20 @@ register_backend(BackendSpec(
 def _vmap_make(level):
     def make(plan, workload):
         f, c, sym = plan.f, plan.csize, plan.symmetric
+        # dual dtype policy (registry.DTYPE_POLICIES): the hDual sweeps run
+        # in cd while accumulation stays in the input dtype; None = exact
+        cd = policy_compute_dtype(plan.opt("dtype_policy", "fp32"))
         if workload == "hvp":
-            return lambda a, v: api.hvp_impl(f, a, v, c, sym)
+            return lambda a, v: api.hvp_impl(f, a, v, c, sym,
+                                             compute_dtype=cd)
         if workload == "hessian":
-            return lambda a: api.hessian_impl(f, a, c, sym)
+            return lambda a: api.hessian_impl(f, a, c, sym, compute_dtype=cd)
         if workload == "batched_hvp":
-            return lambda A, V: api.batched_hvp_impl(f, A, V, c, level, sym)
+            return lambda A, V: api.batched_hvp_impl(f, A, V, c, level, sym,
+                                                     compute_dtype=cd)
         if workload == "batched_hessian":
-            return jax.vmap(lambda a: api.hessian_impl(f, a, c, sym))
+            return jax.vmap(
+                lambda a: api.hessian_impl(f, a, c, sym, compute_dtype=cd))
         raise KeyError(workload)
     return make
 
@@ -64,7 +71,8 @@ for _level, _prio, _doc in (
         ("L2", 20, "fully batched rows x chunks + segment reduce (Fig. 2)")):
     register_backend(BackendSpec(
         name=f"vmap_{_level.lower()}", make=_vmap_make(_level),
-        workloads=_ALL, priority=_prio, doc=_doc))
+        workloads=_ALL, priority=_prio, doc=_doc,
+        dtype_policies=frozenset(DTYPE_POLICIES)))
 
 
 # ---------------------------------------------------------------------------

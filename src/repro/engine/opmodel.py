@@ -36,6 +36,7 @@ __all__ = [
     "mults_chunk_hess", "mults_schunk_hess", "exact_mults",
     "csize_candidates", "pruned_csize_candidates", "model_csize",
     "probe_chunk_cost", "probe_csize_candidates", "model_csize_probes",
+    "suggest_dispatch_knobs",
     "count_jaxpr_ops", "LANE_WIDTH",
 ]
 
@@ -173,6 +174,41 @@ def model_csize_probes(n_probes: int) -> int:
     penalty bites (P=64 -> 16)."""
     cands = probe_csize_candidates(n_probes)
     return min(cands, key=lambda c: (probe_chunk_cost(n_probes, c), c))
+
+
+# ---------------------------------------------------------------------------
+# dispatcher-knob model (the latency/throughput dial, driven from telemetry)
+# ---------------------------------------------------------------------------
+
+def suggest_dispatch_knobs(rate_rps: float, us_per_point_by_bucket: dict,
+                           *, wait_cap_us: float = 5000.0,
+                           max_batch_cap: int = 256):
+    """Pick (max_batch, max_wait_us) for one plan queue from its measured
+    per-bucket us/point and its observed arrival rate.
+
+    The service's two knobs are a latency/throughput dial; with live
+    telemetry the dial stops being hand-set: the target bucket ``b*`` is the
+    cheapest measured bucket whose FILL TIME at the observed Poisson rate --
+    (b-1)/rate, the wait the oldest request pays before a full dispatch --
+    stays inside ``wait_cap_us``.  ``max_batch`` becomes ``b*`` (dispatch
+    exactly at the efficient size, never pad past it) and ``max_wait_us``
+    1.5x the expected fill time (partial buckets flush shortly after a full
+    one would have formed, instead of at an arbitrary global deadline).
+
+    Returns ``(max_batch, max_wait_us)``, or None when there is nothing to
+    learn from (no measured buckets, or no measured arrival rate -- the
+    caller keeps its current knobs)."""
+    cands = sorted(int(b) for b, us in us_per_point_by_bucket.items()
+                   if us is not None and us > 0 and 1 <= b <= max_batch_cap)
+    if not cands or rate_rps is None or rate_rps <= 0:
+        return None
+    fill_us = {b: (b - 1) / rate_rps * 1e6 for b in cands}
+    feasible = [b for b in cands if fill_us[b] <= wait_cap_us]
+    if not feasible:
+        feasible = [min(cands)]     # overload-safe: smallest measured bucket
+    best = min(feasible, key=lambda b: (us_per_point_by_bucket[b], b))
+    max_wait_us = min(wait_cap_us, 1.5 * fill_us[best])
+    return best, max_wait_us
 
 
 def count_jaxpr_ops(n, csize, n_mults):

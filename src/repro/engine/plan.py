@@ -249,8 +249,8 @@ class CurvaturePlan:
         return exe(params, v, v if w is None else w)
 
     # -- async serving -----------------------------------------------------
-    def submit(self, a, v=None, *, workload=None, service=None, block=True,
-               timeout=None):
+    def submit(self, a, v=None, *, workload=None, n_probes=None,
+               service=None, block=True, timeout=None):
         """Submit one request to the coalescing CurvatureService.
 
         Returns a ``concurrent.futures.Future``.  Flat plans:
@@ -265,6 +265,11 @@ class CurvaturePlan:
           submit(params, v_tree)                  -> future of H @ v
           submit(params, key, workload="diag")    -> future of diag est.
 
+        Diag submits accept a per-request probe budget ``n_probes=k``
+        (``1 <= k <= `` the plan's ``n_probes`` option); mixed budgets
+        still coalesce into one bucket -- the batched executable masks
+        probe chunks past each row's budget.
+
         Requests from concurrent callers that share this plan's signature
         (and, for pytrees, the treedef) are padded into one power-of-two
         micro-batch and executed by one cached batched executable.
@@ -272,7 +277,8 @@ class CurvaturePlan:
         ``timeout`` control backpressure when its queue is full."""
         if service is None:
             service = self.service()
-        return service.submit(self, a, v, workload=workload, block=block,
+        return service.submit(self, a, v, workload=workload,
+                              n_probes=n_probes, block=block,
                               timeout=timeout)
 
     def service(self):
@@ -346,6 +352,23 @@ def plan(f, n=None, m=None, csize="auto", backend="auto", symmetric=True,
     """
     opts = dict(options or {})
     opts.update(extra_options)
+    policy = opts.get("dtype_policy")
+    if policy is not None:
+        # fail at PLAN time: an unknown policy is a typo, and fp64 duals
+        # without x64 would silently truncate to fp32 (jax downcasts)
+        from .registry import DTYPE_POLICIES
+        if policy not in DTYPE_POLICIES:
+            raise ValueError(
+                f"unknown dtype_policy {policy!r}; expected one of "
+                f"{DTYPE_POLICIES}")
+        if policy == "fp64" and not jax.config.jax_enable_x64:
+            raise ValueError(
+                "dtype_policy='fp64' needs jax x64 enabled "
+                "(jax.config.update('jax_enable_x64', True))")
+        if policy == "fp32":
+            # the default: drop it so the plan's cache/telemetry signature
+            # is identical to a plan that never mentioned a policy
+            del opts["dtype_policy"]
     if backend != "auto":
         # fail at PLAN time, not first execute: an unknown name is a typo
         # and a mesh-requiring backend without a mesh can never run --

@@ -41,10 +41,33 @@ __all__ = [
     "BackendSpec", "register_backend", "get_backend", "list_backends",
     "resolve_backend", "WORKLOADS",
     "record_execution", "execution_stats", "clear_telemetry",
+    "DTYPE_POLICIES", "policy_compute_dtype", "bucket_telemetry",
 ]
 
 WORKLOADS = ("hvp", "hessian", "batched_hvp", "batched_hessian", "diag",
              "quadform", "ggn", "fisher", "batched_diag")
+
+# dual-number dtype policies (the HomebrewNLP-style host/dtype dial made a
+# plan option): "fp32" runs the hDual sweeps in the input dtype (default),
+# "bf16" casts the seed point so every tangent component is bfloat16 while
+# accumulation stays fp32, "fp64" widens (requires jax x64).  A backend
+# advertises which policies its schedules actually honor; plans carrying a
+# non-default ``dtype_policy`` option only resolve to capable backends.
+DTYPE_POLICIES = ("fp32", "bf16", "fp64")
+
+
+def policy_compute_dtype(policy: str):
+    """The compute dtype a policy casts tangent sweeps to (None = keep the
+    input dtype, i.e. the "fp32" default on fp32 inputs)."""
+    if policy in (None, "fp32"):
+        return None
+    import jax.numpy as jnp
+    if policy == "bf16":
+        return jnp.bfloat16
+    if policy == "fp64":
+        return jnp.float64
+    raise ValueError(
+        f"unknown dtype_policy {policy!r}; expected one of {DTYPE_POLICIES}")
 
 
 @dataclass(frozen=True)
@@ -64,6 +87,9 @@ class BackendSpec:
     flat_only: bool = True
     supports: Optional[Callable] = None
     doc: str = ""
+    # dual dtype policies the backend's schedules honor; the default keeps
+    # every backend on the exact path unless it opts in (see DTYPE_POLICIES)
+    dtype_policies: frozenset = frozenset({"fp32"})
 
     def can_run(self, plan, workload: str) -> bool:
         if workload not in self.workloads:
@@ -71,6 +97,8 @@ class BackendSpec:
         if self.requires_mesh and plan.mesh is None:
             return False
         if self.flat_only and plan.n is None:
+            return False
+        if plan.opt("dtype_policy", "fp32") not in self.dtype_policies:
             return False
         if self.supports is not None and not self.supports(plan, workload):
             return False
@@ -150,6 +178,7 @@ _TELEMETRY_LOCK = threading.Lock()
 _TELEMETRY_WINDOW = 64               # samples the consult best considers
 _TELEMETRY_HALFLIFE_S = 600.0        # age doubling period for old samples
 _TELEMETRY_DRIFT = 1.05              # upward best drift tolerated silently
+_BUCKET_RECENT = 32                  # timestamped window per (sig, bucket)
 
 
 def clear_telemetry() -> None:
@@ -195,6 +224,11 @@ def record_execution(signature, backend: str, workload: str, *,
         samples = entry["by_bucket"].setdefault(
             int(bucket), collections.deque(maxlen=_TELEMETRY_MAXSAMPLES))
         samples.append(float(us_per_point))
+        # timestamped short window per bucket: what the online re-tuner's
+        # drift detector reads (recent mean vs the tuned baseline)
+        recent_b = entry.setdefault("by_bucket_recent", {}).setdefault(
+            int(bucket), collections.deque(maxlen=_BUCKET_RECENT))
+        recent_b.append((float(us_per_point), t))
         entry["recent"].append((float(us_per_point), t))
         best = min(us * 2.0 ** (max(0.0, t - ts) / _TELEMETRY_HALFLIFE_S)
                    for us, ts in entry["recent"])
@@ -230,6 +264,30 @@ def execution_stats() -> list[dict]:
         out.append({"signature": sig, "backend": entry["backend"],
                     "workload": entry["workload"], "by_bucket": buckets})
     return out
+
+
+def bucket_telemetry(signature) -> dict:
+    """Per-bucket recent telemetry for one plan signature: ``{bucket:
+    {"count", "recent_us_mean", "recent_us_min", "last_t"}}`` over the
+    timestamped short window (``_BUCKET_RECENT`` newest samples).  This is
+    the live objective the online re-tuner compares against its learned
+    winner -- ``count`` is the total samples ever recorded for the bucket,
+    the ``recent_*`` fields summarize only the window."""
+    with _TELEMETRY_LOCK:
+        entry = _TELEMETRY.get(signature)
+        if entry is None:
+            return {}
+        out = {}
+        for b, samples in entry["by_bucket"].items():
+            recent = list(entry.get("by_bucket_recent", {}).get(b, ()))
+            info = {"count": len(samples)}
+            if recent:
+                us = [u for u, _t in recent]
+                info.update(recent_us_mean=sum(us) / len(us),
+                            recent_us_min=min(us),
+                            last_t=recent[-1][1])
+            out[int(b)] = info
+        return out
 
 
 def _telemetry_best(plan, workload: str, names: dict, fp: str):

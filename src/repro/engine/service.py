@@ -34,8 +34,28 @@ The two knobs are the classic latency/throughput dial:
                 fuller buckets.
 
 Every executed bucket is reported to ``registry.record_execution`` --
-measured us/point per (plan signature, bucket) -- the history a future
-``backend="auto"`` can learn from.
+measured us/point per (plan signature, bucket) -- and PR 8 closes the loop:
+the service can TUNE ITSELF against that history.  With
+``retune_interval_s`` set, a background re-tune thread watches each flat
+plan queue's live traffic (arrival rate, bucket mix, per-bucket us/point
+from ``registry.bucket_telemetry``) and, when the mix shifts to untuned
+buckets or a tuned bucket drifts past ``drift_factor`` x its learned
+baseline, re-runs the joint (csize, backend, blk_m, dtype_policy) sweep of
+``autotune.autotune_buckets`` at the OBSERVED bucket shapes.  Winners are
+hot-swapped per bucket (``_PlanQueue.exec_by_bucket``) under the service
+lock -- queued requests are untouched and in-flight futures resolve
+normally, so no request is ever dropped by a re-tune -- and the same
+learned store drives the dispatcher knobs via
+``opmodel.suggest_dispatch_knobs`` (per-queue ``max_batch`` /
+``max_wait_us`` overrides).  ``retune()`` runs one pass synchronously for
+deterministic tests; ``tuning_report()`` snapshots what has been learned.
+
+GGN/Hutchinson diag requests batch with per-request probe budgets (PR 8):
+``submit(plan, params, key, workload="diag", n_probes=k)`` rides the same
+coalesced bucket as full-budget requests -- the pytree backend's
+``batched_diag`` executable takes a per-row probe-count vector and masks
+probe chunks past each row's budget, so one compiled program serves every
+budget ``1 <= k <= plan n_probes``.
 
 Usage::
 
@@ -67,7 +87,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import registry
+from . import opmodel, registry
 from .plan import CurvaturePlan, bucket_size, pad_rows
 from .pytree import PytreeSpec, spec_of
 
@@ -96,6 +116,7 @@ class _Request:
     v: Any                       # None => hessian workload
     future: Future
     t_submit: float              # service clock, for the wait budget
+    p: Optional[int] = None      # per-request probe budget (diag only)
 
 
 @dataclass
@@ -115,6 +136,24 @@ class _PlanQueue:
                                  # _queues index and the telemetry key)
     spec: Optional[PytreeSpec] = None    # set for pytree queues
     requests: collections.deque = field(default_factory=collections.deque)
+    # -- online-tuning state (flat queues only; all guarded by the service
+    # lock).  ``exec_by_bucket`` maps bucket -> (derived plan, backend name,
+    # telemetry key): the hot-swapped winner executable for that bucket.
+    # ``tuned_us`` keeps the winner's tuned us/point baseline for drift
+    # detection; ``max_batch``/``max_wait_us`` are learned per-queue
+    # dispatcher-knob overrides (None = service defaults).  ``arrivals``
+    # is a sliding window of submit timestamps (arrival-rate estimate) and
+    # ``epoch_counts`` the per-bucket point counts since the last re-tune
+    # pass (the observed traffic mix the tuner sweeps against).
+    exec_by_bucket: dict = field(default_factory=dict)
+    tuned_us: dict = field(default_factory=dict)
+    max_batch: Optional[int] = None
+    max_wait_us: Optional[float] = None
+    arrivals: collections.deque = field(
+        default_factory=lambda: collections.deque(maxlen=256))
+    epoch_counts: collections.Counter = field(
+        default_factory=collections.Counter)
+    epoch_points: int = 0
 
 
 class CurvatureService:
@@ -130,16 +169,58 @@ class CurvatureService:
                  max_wait_us: float = DEFAULT_MAX_WAIT_US,
                  max_queue: int = DEFAULT_MAX_QUEUE,
                  clock: Callable[[], float] = time.monotonic,
-                 start: bool = True):
+                 start: bool = True,
+                 retune_interval_s: Optional[float] = None,
+                 retune_deadline_s: float = 1.0,
+                 retune_min_points: int = 32,
+                 retune_min_share: float = 0.05,
+                 drift_factor: float = 1.5,
+                 wait_cap_us: float = 5000.0,
+                 tuner: Optional[Callable] = None,
+                 tune_dispatch: bool = True):
+        """Online-tuning knobs (all optional; tuning is OFF by default):
+
+        retune_interval_s : period of the background re-tune thread.  None
+            (default) disables the thread -- ``retune()`` can still be
+            called synchronously (tests, embeddings driving their own loop).
+        retune_deadline_s : wall-clock budget handed to one tuner sweep.
+        retune_min_points : a queue is not examined until this many points
+            have been served since its last re-tune pass (noise floor).
+        retune_min_share  : buckets below this share of the epoch's traffic
+            are ignored -- the tuner only sweeps shapes that matter.
+        drift_factor      : a tuned bucket whose recent measured us/point
+            exceeds ``drift_factor`` x its learned baseline is re-tuned
+            with ``force=True`` (the stored winner is stale).
+        wait_cap_us       : latency ceiling the learned dispatcher knobs
+            must honor (``opmodel.suggest_dispatch_knobs``).
+        tuner             : injectable sweep ``tuner(plan, workload,
+            buckets, force, deadline_s) -> {bucket: BucketTunedConfig}``;
+            defaults to ``autotune.autotune_buckets``.  Tests inject fakes
+            for deterministic shift scenarios.
+        tune_dispatch     : also learn per-queue ``max_batch`` /
+            ``max_wait_us`` from arrival rate + tuned us/point.
+        """
         if max_batch < 1:
             raise ValueError(f"max_batch={max_batch} must be >= 1")
         if max_wait_us < 0:
             raise ValueError(f"max_wait_us={max_wait_us} must be >= 0")
         if max_queue < 1:
             raise ValueError(f"max_queue={max_queue} must be >= 1")
+        if retune_interval_s is not None and retune_interval_s <= 0:
+            raise ValueError(
+                f"retune_interval_s={retune_interval_s} must be > 0 (or "
+                f"None to disable the re-tune thread)")
         self.max_batch = int(max_batch)
         self.max_wait_us = float(max_wait_us)
         self.max_queue = int(max_queue)
+        self.retune_interval_s = retune_interval_s
+        self.retune_deadline_s = float(retune_deadline_s)
+        self.retune_min_points = int(retune_min_points)
+        self.retune_min_share = float(retune_min_share)
+        self.drift_factor = float(drift_factor)
+        self.wait_cap_us = float(wait_cap_us)
+        self.tune_dispatch = bool(tune_dispatch)
+        self._tuner = tuner
         self._clock = clock
         self._lock = threading.Lock()
         self._space = threading.Condition(self._lock)   # queue-full waiters
@@ -152,19 +233,28 @@ class CurvatureService:
         self._pending = 0
         self._closed = False
         self._stats = {"submitted": 0, "dispatched": 0, "batches": 0,
-                       "padded_rows": 0,
+                       "padded_rows": 0, "retunes": 0, "retune_errors": 0,
+                       "hot_swaps": 0,
                        "buckets": collections.Counter()}
         self._thread: Optional[threading.Thread] = None
+        self._retune_stop = threading.Event()
+        self._retune_thread: Optional[threading.Thread] = None
         if start:
             self._thread = threading.Thread(
                 target=self._dispatch_loop, name="curvature-service",
                 daemon=True)
             self._thread.start()
+            if self.retune_interval_s is not None:
+                self._retune_thread = threading.Thread(
+                    target=self._retune_loop, name="curvature-retune",
+                    daemon=True)
+                self._retune_thread.start()
 
     # -- client side --------------------------------------------------------
 
     def submit(self, plan: CurvaturePlan, a, v=None, *,
-               workload: Optional[str] = None, block: bool = True,
+               workload: Optional[str] = None,
+               n_probes: Optional[int] = None, block: bool = True,
                timeout: Optional[float] = None) -> Future:
         """Enqueue one request; returns a Future of the single-point result.
 
@@ -180,6 +270,12 @@ class CurvatureService:
           submit(plan, params, v_tree)               -> H @ v (numpy tree)
           submit(plan, params, key, workload="diag") -> diag estimate
 
+        Diag submits may carry a per-request probe budget
+        (``n_probes=k``, ``1 <= k <= plan n_probes``): the request still
+        coalesces into the shared bucket -- the batched_diag executable
+        masks probe chunks past each row's budget, so mixed budgets share
+        one compiled program.  Default (None) is the plan's full budget.
+
         Results are host numpy arrays / pytrees of them (the serving
         payload); inputs are host-marshalled too, so numpy inputs are the
         fast path.
@@ -188,14 +284,19 @@ class CurvatureService:
         call blocks until space frees (``timeout`` seconds at most), or
         raises ``ServiceQueueFull`` immediately when ``block=False``.
         """
+        p = None
         if plan.n is None:
-            dplan, workload, backend, key, spec, a, v = \
-                self._marshal_pytree(plan, a, v, workload)
+            dplan, workload, backend, key, spec, a, v, p = \
+                self._marshal_pytree(plan, a, v, workload, n_probes)
         else:
             if workload is not None:
                 raise ValueError(
                     "workload= selects the pytree workload; flat plans "
                     "infer it from the arguments (v given -> hvp)")
+            if n_probes is not None:
+                raise ValueError(
+                    "n_probes= is a probe budget for pytree diag submits; "
+                    "flat HVP/Hessian requests have no probe axis")
             dplan, spec = plan, None
             workload = "batched_hvp" if v is not None else "batched_hessian"
             route = self._routes.get((id(plan), workload))
@@ -246,7 +347,9 @@ class CurvatureService:
                 q = _PlanQueue(plan=dplan, workload=workload,
                                backend=backend, key=key, spec=spec)
                 self._queues[key] = q
-            q.requests.append(_Request(a, v, fut, self._clock()))
+            t = self._clock()
+            q.requests.append(_Request(a, v, fut, t, p))
+            q.arrivals.append(t)        # rate window for the knob model
             self._pending += 1
             self._stats["submitted"] += 1
             # wake the dispatcher only on the transitions it cares about: a
@@ -254,12 +357,13 @@ class CurvatureService:
             # queue reaching a full bucket (dispatch now, not at deadline).
             # Anything in between is already covered by its deadline timer,
             # and an Event.set per submit costs a lock on the hot path.
-            nudge = self._pending == 1 or len(q.requests) >= self.max_batch
+            nudge = (self._pending == 1
+                     or len(q.requests) >= (q.max_batch or self.max_batch))
         if nudge:
             self._wake.set()
         return fut
 
-    def _marshal_pytree(self, plan: CurvaturePlan, a, v, workload):
+    def _marshal_pytree(self, plan: CurvaturePlan, a, v, workload, n_probes):
         """Resolve and host-marshal one pytree request.
 
         Coalescing key: a derived plan carrying the request's PytreeSpec as
@@ -267,7 +371,7 @@ class CurvatureService:
         machinery separates treedefs.  The params (and tangent) trees ravel
         to one host row each; PRNG keys pass through as raw key-data rows.
         Returns (derived plan, batched workload, backend, cache key, spec,
-        a_row, v_row)."""
+        a_row, v_row, probe budget)."""
         if workload in (None, "hvp"):
             if v is None:
                 raise ValueError(
@@ -275,6 +379,10 @@ class CurvatureService:
                     "v) -- or Hutchinson diag -- submit(plan, params, key, "
                     "workload='diag'); dense pytree Hessians are not a "
                     "service workload")
+            if n_probes is not None:
+                raise ValueError(
+                    "n_probes= is a diag probe budget; HVP submits have "
+                    "no probe axis")
             workload = "batched_hvp"
         elif workload == "diag":
             if v is None:
@@ -282,6 +390,16 @@ class CurvatureService:
                     "workload='diag' needs the probe PRNG key as the "
                     "second argument: submit(plan, params, key, "
                     "workload='diag')")
+            cap = int(plan.opt("n_probes", 4))
+            if n_probes is None:
+                n_probes = cap
+            else:
+                n_probes = int(n_probes)
+                if not 1 <= n_probes <= cap:
+                    raise ValueError(
+                        f"n_probes={n_probes} out of range: the plan's "
+                        f"probe budget is 1..{cap} (its n_probes option "
+                        f"caps the shared compiled program)")
             workload = "batched_diag"
         else:
             raise ValueError(
@@ -311,7 +429,7 @@ class CurvatureService:
                                                         jax.dtypes.prng_key):
                 v = jax.random.key_data(v)   # typed keys -> raw key data
             v_row = np.asarray(v)
-        return dplan, workload, backend, key, spec, a_row, v_row
+        return dplan, workload, backend, key, spec, a_row, v_row, n_probes
 
     # -- dispatcher side ----------------------------------------------------
 
@@ -355,12 +473,17 @@ class CurvatureService:
             for key, q in list(self._queues.items()):
                 if not q.requests:
                     continue
-                full = len(q.requests) >= self.max_batch
+                # learned per-queue dispatcher knobs override the service
+                # defaults once the re-tune loop has fit them
+                eff_batch = q.max_batch or self.max_batch
+                eff_wait = (q.max_wait_us if q.max_wait_us is not None
+                            else self.max_wait_us)
+                full = len(q.requests) >= eff_batch
                 if not (force or full):
                     age_us = (now - q.requests[0].t_submit) * 1e6
-                    if age_us < self.max_wait_us:
+                    if age_us < eff_wait:
                         continue
-                k = min(len(q.requests), self.max_batch)
+                k = min(len(q.requests), eff_batch)
                 reqs = [q.requests.popleft() for _ in range(k)]
                 self._pending -= k
                 self._queues.move_to_end(key)
@@ -375,6 +498,13 @@ class CurvatureService:
             return
         k = len(live)
         bucket = bucket_size(k, self.max_batch)
+        # per-bucket hot-swap: the re-tune loop installs winner executables
+        # keyed by bucket; requests queued before a swap still execute (on
+        # the new winner) and their futures resolve -- nothing is dropped.
+        with self._lock:
+            tuned = q.exec_by_bucket.get(bucket)
+        xplan, xbackend, xkey = tuned if tuned is not None \
+            else (q.plan, q.backend, q.key)
         try:
             # marshal BOTH operands before t0: telemetry must charge the
             # same work to hvp and hessian buckets (execution + readback,
@@ -385,19 +515,28 @@ class CurvatureService:
             V = None if q.workload == "batched_hessian" else jnp.asarray(
                 pad_rows(np.stack([r.v for r in live]), bucket))
             t0 = time.perf_counter()
-            if q.spec is not None:
-                out = q.plan.executable(q.workload)(A, V)
+            if q.workload == "batched_diag":
+                # per-row probe budgets: padding rows inherit the last
+                # row's budget (their output is sliced off anyway)
+                P = jnp.asarray(pad_rows(
+                    np.asarray([r.p for r in live], np.int32), bucket))
+                out = xplan.executable(q.workload)(A, V, P)
+            elif q.spec is not None:
+                out = xplan.executable(q.workload)(A, V)
             elif V is not None:
-                out = q.plan.batched_hvp(A, V)
+                out = xplan.executable(q.workload)(A, V)
             else:
-                out = q.plan.batched_hessian(A)
+                out = xplan.executable(q.workload)(A)
             out = np.asarray(jax.block_until_ready(out))
             elapsed = time.perf_counter() - t0
         except Exception as e:
             for r in live:
                 r.future.set_exception(e)
             return
-        registry.record_execution(q.key, q.backend, q.workload,
+        # telemetry charges the executable that actually ran -- after a
+        # hot-swap the winner's signature accumulates the fresh history the
+        # drift detector compares against its tuned baseline
+        registry.record_execution(xkey, xbackend, q.workload,
                                   bucket=bucket, n_points=k,
                                   elapsed_s=elapsed)
         with self._lock:
@@ -405,6 +544,8 @@ class CurvatureService:
             self._stats["batches"] += 1
             self._stats["padded_rows"] += bucket - k
             self._stats["buckets"][bucket] += 1
+            q.epoch_counts[bucket] += k
+            q.epoch_points += k
         for i, r in enumerate(live):
             # copy: out[i] would be a view pinning the whole padded bucket
             # (max_batch rows) for as long as the client keeps its result
@@ -433,23 +574,216 @@ class CurvatureService:
             self._wake.wait(delay)
 
     def _next_deadline_delay(self) -> Optional[float]:
-        """Seconds until the oldest pending request exceeds its wait budget
-        (None = sleep until nudged).  Caller holds the lock."""
-        oldest = None
+        """Seconds until the oldest pending request exceeds its queue's wait
+        budget (None = sleep until nudged).  Caller holds the lock."""
+        deadline = None
         for q in self._queues.values():
             if q.requests:
-                t = q.requests[0].t_submit
-                oldest = t if oldest is None else min(oldest, t)
-        if oldest is None:
+                wait = (q.max_wait_us if q.max_wait_us is not None
+                        else self.max_wait_us)
+                t = q.requests[0].t_submit + wait * 1e-6
+                deadline = t if deadline is None else min(deadline, t)
+        if deadline is None:
             return None
-        remaining = self.max_wait_us * 1e-6 - (self._clock() - oldest)
+        remaining = deadline - self._clock()
         return max(remaining, 0.0) + 1e-4   # small slack past the deadline
+
+    # -- online tuning ------------------------------------------------------
+
+    def _arrival_rate(self, q: _PlanQueue) -> Optional[float]:
+        """Requests/second over the queue's sliding arrival window (service
+        clock); None until two arrivals span measurable time."""
+        if len(q.arrivals) < 2:
+            return None
+        span = q.arrivals[-1] - q.arrivals[0]
+        if span <= 0:
+            return None
+        return (len(q.arrivals) - 1) / span
+
+    def _exec_key_for(self, q: _PlanQueue, bucket: int) -> tuple:
+        ent = q.exec_by_bucket.get(bucket)
+        return ent[2] if ent is not None else q.key
+
+    def _examine_queue(self, q: _PlanQueue):
+        """Decide what (if anything) to re-tune for one queue.  Caller
+        holds the lock.  Returns (mix, need, forced) or None.
+
+        mix    : {bucket: share of epoch points}, thresholded at
+                 ``retune_min_share`` -- the observed traffic the tuner
+                 sweeps against.
+        need   : {bucket: weight} subset actually requiring a sweep --
+                 buckets never tuned, or tuned but drifted.
+        forced : buckets whose stored winner must be re-probed (drift).
+        """
+        # pytree queues (ravel width is data-dependent, executables are
+        # spec-specialized) and mesh plans (the sharded layout IS the
+        # tuning decision) are served as-is; only flat single-device
+        # queues join the loop
+        if q.spec is not None or q.plan.n is None or q.plan.mesh is not None:
+            return None
+        if q.epoch_points < self.retune_min_points:
+            return None
+        total = sum(q.epoch_counts.values())
+        if total <= 0:
+            return None
+        mix = {b: c / total for b, c in q.epoch_counts.items()
+               if c / total >= self.retune_min_share}
+        if not mix:
+            return None
+        need, forced = {}, set()
+        for b, w in mix.items():
+            if b not in q.tuned_us:
+                need[b] = w             # new bucket in the traffic mix
+                continue
+            # drift: recent measured us/point vs the tuned baseline
+            base = q.tuned_us.get(b)
+            tel = registry.bucket_telemetry(
+                self._exec_key_for(q, b)).get(b)
+            if (base and tel
+                    and tel.get("recent_us_mean", 0.0)
+                    > self.drift_factor * base):
+                need[b] = w
+                forced.add(b)
+        return mix, need, forced
+
+    def _run_tuner(self, q: _PlanQueue, need: dict, forced: set) -> dict:
+        """One sweep against the observed buckets (no locks held: the tuner
+        compiles and times probe executables)."""
+        if self._tuner is not None:
+            return self._tuner(q.plan, q.workload, dict(need),
+                               bool(forced), self.retune_deadline_s) or {}
+        from .autotune import autotune_buckets
+        p = q.plan
+        return autotune_buckets(
+            p.f, p.n, dict(need), symmetric=p.symmetric, backend=p.backend,
+            options=p.options, workload=q.workload,
+            deadline_s=self.retune_deadline_s, force=bool(forced))
+
+    def _apply_tuned(self, q: _PlanQueue, tuned: dict) -> int:
+        """Install winner executables per bucket.  Caller holds the lock.
+
+        The swap is a dict assignment: queued requests are untouched, the
+        next ``_execute`` for that bucket simply resolves to the new
+        (already compiled -- ``apply_bucket_config`` reproduces the probe
+        plan's cache key) executable.  Zero dropped requests by design."""
+        from .autotune import apply_bucket_config
+        swaps = 0
+        for b, cfg in tuned.items():
+            if cfg is None:
+                continue
+            ep = apply_bucket_config(q.plan, cfg)
+            key = ep.cache_key(q.workload, cfg.backend)
+            prev = q.exec_by_bucket.get(int(b))
+            if prev is not None and prev[2] == key:
+                q.tuned_us[int(b)] = cfg.us_per_point  # refreshed baseline
+                continue
+            q.exec_by_bucket[int(b)] = (ep, cfg.backend, key)
+            q.tuned_us[int(b)] = cfg.us_per_point
+            swaps += 1
+        return swaps
+
+    def _tune_queue_knobs(self, q: _PlanQueue) -> None:
+        """Fit the per-queue dispatcher knobs from arrival rate + learned
+        us/point (caller holds the lock)."""
+        rate = self._arrival_rate(q)
+        us_table = {}
+        for b in set(q.tuned_us) | set(q.epoch_counts):
+            tel = registry.bucket_telemetry(
+                self._exec_key_for(q, b)).get(b) or {}
+            us = tel.get("recent_us_mean") or q.tuned_us.get(b)
+            if us:
+                us_table[b] = us
+        knobs = opmodel.suggest_dispatch_knobs(
+            rate, us_table, wait_cap_us=self.wait_cap_us,
+            max_batch_cap=self.max_batch)
+        if knobs is not None:
+            q.max_batch, q.max_wait_us = int(knobs[0]), float(knobs[1])
+
+    def retune(self) -> dict:
+        """One synchronous re-tune pass over every queue; returns a summary
+        ``{queues_examined, queues_tuned, hot_swaps, errors}``.
+
+        This is exactly what the background thread runs every
+        ``retune_interval_s``; tests (and embeddings pacing their own loop)
+        call it directly for determinism.  Tuner sweeps run with NO service
+        lock held -- submits and dispatches proceed concurrently -- and the
+        resulting executable swaps are single dict assignments under the
+        lock."""
+        summary = {"queues_examined": 0, "queues_tuned": 0,
+                   "hot_swaps": 0, "errors": 0}
+        with self._lock:
+            work = []
+            for q in self._queues.values():
+                decision = self._examine_queue(q)
+                if decision is None:
+                    continue
+                summary["queues_examined"] += 1
+                work.append((q, *decision))
+        for q, mix, need, forced in work:
+            tuned = {}
+            if need:
+                try:
+                    tuned = self._run_tuner(q, need, forced)
+                except Exception:
+                    summary["errors"] += 1
+                    with self._lock:
+                        self._stats["retune_errors"] += 1
+                    continue
+            with self._lock:
+                swaps = self._apply_tuned(q, tuned)
+                if self.tune_dispatch:
+                    self._tune_queue_knobs(q)
+                # the epoch resets AFTER a successful pass: the next shift
+                # is judged against fresh traffic only
+                q.epoch_counts.clear()
+                q.epoch_points = 0
+                self._stats["retunes"] += 1
+                self._stats["hot_swaps"] += swaps
+                summary["queues_tuned"] += 1
+                summary["hot_swaps"] += swaps
+        return summary
+
+    def _retune_loop(self) -> None:
+        while not self._retune_stop.wait(self.retune_interval_s):
+            if self._closed:
+                return
+            try:
+                self.retune()
+            except Exception:           # pragma: no cover - defensive
+                with self._lock:
+                    self._stats["retune_errors"] += 1
+
+    def tuning_report(self) -> list:
+        """Snapshot of the learned state, one entry per flat queue:
+        ``{f, n, workload, max_batch, max_wait_us, buckets: {bucket:
+        {csize, backend, blk_m, dtype_policy, tuned_us}}}``."""
+        out = []
+        with self._lock:
+            for q in self._queues.values():
+                if q.spec is not None or q.plan.n is None:
+                    continue
+                buckets = {}
+                for b, (ep, backend, _key) in sorted(q.exec_by_bucket.items()):
+                    buckets[b] = {
+                        "csize": ep.csize, "backend": backend,
+                        "blk_m": ep.opt("blk_m"),
+                        "dtype_policy": ep.opt("dtype_policy", "fp32"),
+                        "tuned_us": q.tuned_us.get(b),
+                    }
+                out.append({
+                    "f": getattr(q.plan.f, "__name__", repr(q.plan.f)),
+                    "n": q.plan.n, "workload": q.workload,
+                    "max_batch": q.max_batch, "max_wait_us": q.max_wait_us,
+                    "buckets": buckets,
+                })
+        return out
 
     # -- lifecycle ----------------------------------------------------------
 
     def stats(self) -> dict:
-        """Counters snapshot: submitted/dispatched/batches/padded_rows plus
-        a {bucket: batches} histogram and the current queue depth."""
+        """Counters snapshot: submitted/dispatched/batches/padded_rows,
+        the tuning counters (retunes/hot_swaps/retune_errors), a
+        {bucket: batches} histogram and the current queue depth."""
         with self._lock:
             s = dict(self._stats)
             s["buckets"] = dict(self._stats["buckets"])
@@ -474,6 +808,10 @@ class CurvatureService:
                                 ServiceClosed("service shut down"))
             self._space.notify_all()
         self._wake.set()
+        self._retune_stop.set()
+        rt, self._retune_thread = self._retune_thread, None
+        if rt is not None:
+            rt.join()
         t, self._thread = self._thread, None
         if t is not None:
             if wait:
@@ -510,7 +848,9 @@ def configure_service(**kwargs) -> CurvatureService:
     """Replace the process-default service (draining the old one).
 
     Accepts the CurvatureService constructor knobs: ``max_batch``,
-    ``max_wait_us``, ``max_queue``, ``clock``, ``start``.  The new service
+    ``max_wait_us``, ``max_queue``, ``clock``, ``start``, plus the online
+    tuning knobs (``retune_interval_s``, ``drift_factor``, ...; see the
+    CurvatureService docstring).  The new service
     is installed atomically BEFORE the old one drains, so a concurrent
     ``get_service()`` can never create (and leak) a third one."""
     global _DEFAULT

@@ -36,6 +36,35 @@ def test_version_gates_match_installed_jax():
         assert compat._shard_map is legacy
 
 
+def test_make_mesh_gate_matches_installed_jax():
+    """MAKE_MESH_HAS_AXIS_TYPES must equal an independent re-probe of both
+    capabilities (the keyword and the enum ship together -- the collapsed
+    single gate is exactly their conjunction)."""
+    import inspect
+    has_kw = "axis_types" in inspect.signature(jax.make_mesh).parameters
+    has_enum = getattr(jax.sharding, "AxisType", None) is not None
+    assert compat.MAKE_MESH_HAS_AXIS_TYPES == (has_kw and has_enum)
+    # auto_axis_types agrees with the enum probe
+    if has_enum:
+        types = compat.auto_axis_types(2)
+        assert types == (jax.sharding.AxisType.Auto,) * 2
+    else:
+        assert compat.auto_axis_types(2) is None
+
+
+def test_make_mesh_drops_axis_types_where_unsupported():
+    """On a jax without the axis-types capability the shim must silently
+    drop even an EXPLICIT axis_types argument (legacy Auto behavior); on a
+    modern jax it must fill in AxisType.Auto per axis."""
+    if not compat.MAKE_MESH_HAS_AXIS_TYPES:
+        # object() would explode inside jax.make_mesh if forwarded
+        mesh = compat.make_mesh((1,), ("data",), axis_types=object())
+        assert mesh.axis_names == ("data",)
+    else:
+        mesh = compat.make_mesh((1,), ("data",))
+        assert mesh.axis_names == ("data",)
+
+
 def _capture_kwargs(monkeypatch):
     seen = {}
 

@@ -1,0 +1,421 @@
+"""PR 8 online-tuning acceptance: the dispatcher-knob model, the dtype
+policy guard (a too-lossy policy is REJECTED, never silently kept), the
+per-bucket online tuner's disk round-trip, and the self-tuning
+CurvatureService -- a traffic shift must trigger a re-tune whose winner is
+hot-swapped with every in-flight future still resolving, and per-request
+diag probe budgets must coalesce exactly."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import engine
+from repro.core import testfns
+from repro.engine import opmodel, registry
+from repro.engine.autotune import (BucketTunedConfig, DtypePolicyRejected,
+                                   apply_bucket_config, autotune_buckets,
+                                   verify_dtype_policy)
+from repro.engine.service import CurvatureService
+
+N = 8
+
+
+@pytest.fixture(autouse=True)
+def _clean_state():
+    engine.clear_autotune_cache()
+    engine.clear_telemetry()
+    yield
+    engine.clear_autotune_cache()
+    engine.clear_telemetry()
+
+
+def _flat_plan(csize=2, **opts):
+    return engine.plan(testfns.rosenbrock, N, csize=csize, symmetric=False,
+                       options=opts or None)
+
+
+# ---------------------------------------------------------------------------
+# dispatcher-knob model (opmodel.suggest_dispatch_knobs)
+# ---------------------------------------------------------------------------
+
+def test_knob_model_picks_cheapest_feasible_bucket():
+    # at 1000 req/s filling 64 takes 63ms >> 5ms cap; 8 takes 7ms > cap;
+    # 4 takes 3ms -- the cheapest bucket inside the cap wins
+    us = {4: 2.0, 8: 1.0, 64: 0.5}
+    knobs = opmodel.suggest_dispatch_knobs(1000.0, us, wait_cap_us=5000.0)
+    assert knobs == (4, pytest.approx(1.5 * 3000.0))
+
+
+def test_knob_model_prefers_cheaper_us_when_both_feasible():
+    us = {4: 2.0, 8: 1.0}
+    b, wait = opmodel.suggest_dispatch_knobs(100000.0, us,
+                                             wait_cap_us=5000.0)
+    assert b == 8                      # 70us fill, cheaper per point
+    assert wait == pytest.approx(1.5 * 70.0)
+
+
+def test_knob_model_overload_falls_back_to_smallest_bucket():
+    # 1 req/s: even bucket 4 takes 3s to fill -- serve the smallest
+    # measured bucket rather than holding requests past any cap
+    b, wait = opmodel.suggest_dispatch_knobs(1.0, {4: 2.0, 8: 1.0},
+                                             wait_cap_us=5000.0)
+    assert b == 4
+    assert wait <= 5000.0
+
+
+def test_knob_model_nothing_to_learn_returns_none():
+    assert opmodel.suggest_dispatch_knobs(None, {4: 1.0}) is None
+    assert opmodel.suggest_dispatch_knobs(0.0, {4: 1.0}) is None
+    assert opmodel.suggest_dispatch_knobs(100.0, {}) is None
+    assert opmodel.suggest_dispatch_knobs(100.0, {4: None}) is None
+
+
+# ---------------------------------------------------------------------------
+# dtype policy: tunable, oracle-guarded, rejected when too lossy
+# ---------------------------------------------------------------------------
+
+def test_fp32_policy_is_exact_and_free():
+    assert verify_dtype_policy(_flat_plan()) == 0.0
+
+
+def test_bf16_policy_verifies_within_default_tol():
+    p = _flat_plan(dtype_policy="bf16")
+    err = verify_dtype_policy(p)
+    assert 0.0 < err < 5e-2
+    # and the policy actually runs: output dtype stays the input dtype
+    A = np.random.RandomState(0).uniform(-2, 2, (4, N)).astype(np.float32)
+    V = np.random.RandomState(1).randn(4, N).astype(np.float32)
+    out = p.batched_hvp(jnp.asarray(A), jnp.asarray(V))
+    assert out.dtype == jnp.float32
+    ref = _flat_plan().batched_hvp(jnp.asarray(A), jnp.asarray(V))
+    err_vs_fp32 = (np.linalg.norm(np.asarray(out) - np.asarray(ref))
+                   / max(np.linalg.norm(np.asarray(ref)), 1e-30))
+    assert err_vs_fp32 < 5e-2
+
+
+def test_bf16_policy_rejected_when_over_tol():
+    """The acceptance gate of the PR: a lossy policy whose oracle error
+    exceeds the plan tolerance must raise, not silently serve."""
+    p = _flat_plan(dtype_policy="bf16", dtype_tol=1e-9)
+    with pytest.raises(DtypePolicyRejected):
+        verify_dtype_policy(p)
+    # non-raising form still reports the error for the tuner's logbook
+    err = verify_dtype_policy(p, raise_on_reject=False)
+    assert err > 1e-9
+
+
+def test_autotuner_drops_rejected_policy_and_keeps_fp32():
+    cfgs = autotune_buckets(
+        testfns.rosenbrock, N, [4], symmetric=False,
+        options={"dtype_tol": 1e-12}, reps=1, use_store=False)
+    cfg = cfgs[4]
+    assert cfg.dtype_policy == "fp32"
+    assert any(pol == "bf16" for pol, _err in cfg.rejected)
+
+
+def test_pinned_bad_policy_raises():
+    with pytest.raises(DtypePolicyRejected):
+        autotune_buckets(
+            testfns.rosenbrock, N, [4], symmetric=False,
+            options={"dtype_policy": "bf16", "dtype_tol": 1e-12},
+            reps=1, use_store=False)
+
+
+def test_backends_without_policy_support_are_vetoed():
+    """reference declares no dtype_policies -> it may not serve a bf16
+    plan; resolution must land on a policy-capable vmap backend."""
+    p = _flat_plan(dtype_policy="bf16")
+    assert p.backend_for("batched_hvp").startswith("vmap_")
+    with pytest.raises(Exception):
+        engine.plan(testfns.rosenbrock, N, csize=2, backend="reference",
+                    options={"dtype_policy": "bf16"}).executable("hvp")
+
+
+# ---------------------------------------------------------------------------
+# autotune_buckets: per-bucket winners, disk round-trip
+# ---------------------------------------------------------------------------
+
+def test_autotune_buckets_sweeps_observed_shapes_and_persists():
+    import sys
+    at = sys.modules["repro.engine.autotune"]
+    cfgs = autotune_buckets(testfns.rosenbrock, N, {2: 0.3, 8: 0.7},
+                            symmetric=False, reps=1)
+    assert set(cfgs) == {2, 8}
+    for b, cfg in cfgs.items():
+        assert cfg.bucket == b and cfg.us_per_point > 0
+        assert cfg.source in ("sweep", "disk")
+    before = at.probe_count()
+    again = autotune_buckets(testfns.rosenbrock, N, {2: 0.3, 8: 0.7},
+                             symmetric=False, reps=1)
+    assert at.probe_count() == before          # warm store: zero probes
+    assert all(c.source == "disk" for c in again.values())
+    assert {b: (c.csize, c.backend) for b, c in again.items()} == \
+           {b: (c.csize, c.backend) for b, c in cfgs.items()}
+
+
+def test_apply_bucket_config_reproduces_probe_cache_key():
+    """Hot-swap zero-latency contract: the derived plan's cache key must
+    equal the tuner's probe plan key, so the winner executable is already
+    compiled at the serving shape."""
+    base = _flat_plan()
+    cfg = BucketTunedConfig(bucket=4, csize=4, backend="vmap_l2",
+                            blk_m=None, dtype_policy="fp32",
+                            us_per_point=1.0, source="measured")
+    ep = apply_bucket_config(base, cfg)
+    assert ep.csize == 4 and ep.backend == "vmap_l2"
+    probe = engine.plan(testfns.rosenbrock, N, csize=4, symmetric=False,
+                        backend="vmap_l2")
+    assert ep.cache_key("batched_hvp", "vmap_l2") == \
+        probe.cache_key("batched_hvp", "vmap_l2")
+
+
+# ---------------------------------------------------------------------------
+# the self-tuning service (fake clock, injected tuner: fully deterministic)
+# ---------------------------------------------------------------------------
+
+def _fake_tuner(calls, csize=4):
+    def tuner(plan, workload, buckets, force, deadline_s):
+        calls.append((dict(buckets), force))
+        return {b: BucketTunedConfig(
+            bucket=b, csize=csize, backend="vmap_l2", blk_m=None,
+            dtype_policy="fp32", us_per_point=1e6, source="fake")
+            for b in buckets}
+    return tuner
+
+
+def _drive(svc, p, batch, rounds, now, rng):
+    futs = []
+    for _ in range(rounds):
+        A = rng.standard_normal((batch, N)).astype(np.float32)
+        V = rng.standard_normal((batch, N)).astype(np.float32)
+        futs += [(svc.submit(p, A[i], V[i]), A[i], V[i])
+                 for i in range(batch)]
+        now[0] += 0.01
+        svc.flush()
+    return futs
+
+
+def test_service_retunes_on_traffic_shift_and_winner_changes():
+    """The satellite scenario: steady bucket-4 traffic is tuned once; the
+    mix shifts to bucket 8 -> the NEXT retune pass sweeps bucket 8 only
+    (the tuned bucket-4 winner is kept), the new winner is installed, and
+    every future -- including ones queued across the swap -- resolves to
+    the correct HVP."""
+    p = _flat_plan()
+    now, calls = [0.0], []
+    rng = np.random.default_rng(0)
+    svc = CurvatureService(max_batch=8, max_wait_us=100.0,
+                           clock=lambda: now[0], start=False,
+                           tuner=_fake_tuner(calls), retune_min_points=8,
+                           tune_dispatch=False)
+    futs = _drive(svc, p, 4, 4, now, rng)
+    s1 = svc.retune()
+    assert s1 == {"queues_examined": 1, "queues_tuned": 1,
+                  "hot_swaps": 1, "errors": 0}
+    assert calls[-1] == ({4: 1.0}, False)
+    q = list(svc._queues.values())[0]
+    assert q.exec_by_bucket[4][0].csize == 4     # winner installed
+
+    # shift the mix; queue some requests BEFORE the retune pass so the
+    # swap happens with work in flight
+    futs += _drive(svc, p, 8, 3, now, rng)
+    A = rng.standard_normal((8, N)).astype(np.float32)
+    V = rng.standard_normal((8, N)).astype(np.float32)
+    inflight = [(svc.submit(p, A[i], V[i]), A[i], V[i]) for i in range(8)]
+    s2 = svc.retune()
+    assert calls[-1][0] == {8: 1.0}              # only the new bucket swept
+    assert s2["hot_swaps"] == 1
+    assert q.exec_by_bucket[8][0].csize == 4
+    svc.flush()                                   # in-flight work dispatches
+    futs += inflight
+
+    # stable traffic, tuned bucket, no drift: the pass is a no-op sweep
+    futs += _drive(svc, p, 8, 4, now, rng)
+    s3 = svc.retune()
+    assert s3["hot_swaps"] == 0 and len(calls) == 2
+
+    for fut, a, v in futs:
+        np.testing.assert_allclose(fut.result(timeout=30),
+                                   np.asarray(p.hvp(a, v)),
+                                   rtol=1e-4, atol=1e-5)
+    assert svc.stats()["retunes"] == 3
+    svc.shutdown()
+
+
+def test_service_drift_forces_a_retune():
+    p = _flat_plan()
+    now, calls = [0.0], []
+    rng = np.random.default_rng(1)
+    svc = CurvatureService(max_batch=8, max_wait_us=100.0,
+                           clock=lambda: now[0], start=False,
+                           tuner=_fake_tuner(calls), retune_min_points=8,
+                           drift_factor=1.5, tune_dispatch=False)
+    for fut, a, v in _drive(svc, p, 8, 4, now, rng):
+        fut.result(30)
+    svc.retune()
+    q = list(svc._queues.values())[0]
+    # shrink the learned baseline below the measured us/point: the next
+    # pass must see recent mean > drift_factor x baseline and force-probe
+    q.tuned_us[8] = 1e-3
+    for fut, a, v in _drive(svc, p, 8, 4, now, rng):
+        fut.result(30)
+    svc.retune()
+    assert calls[-1] == ({8: 1.0}, True)
+    svc.shutdown()
+
+
+def test_service_fits_dispatch_knobs_from_rate_and_telemetry():
+    p = _flat_plan()
+    now, calls = [0.0], []
+    rng = np.random.default_rng(2)
+    svc = CurvatureService(max_batch=256, max_wait_us=100.0,
+                           clock=lambda: now[0], start=False,
+                           tuner=_fake_tuner(calls), retune_min_points=8,
+                           tune_dispatch=True)
+    for _ in range(4):                       # 10k req/s at bucket 8
+        A = rng.standard_normal((8, N)).astype(np.float32)
+        V = rng.standard_normal((8, N)).astype(np.float32)
+        fs = [svc.submit(p, A[i], V[i]) for i in range(8)]
+        now[0] += 8e-4
+        svc.flush()
+        for f in fs:
+            f.result(30)
+    svc.retune()
+    rep = svc.tuning_report()
+    assert rep and rep[0]["max_batch"] == 8
+    assert rep[0]["max_wait_us"] is not None
+    assert 8 in rep[0]["buckets"]
+    svc.shutdown()
+
+
+def test_retune_with_real_tuner_end_to_end():
+    """No injected tuner: the service sweeps its own observed buckets with
+    autotune_buckets, installs real winners, and post-swap dispatches
+    still match the oracle."""
+    p = _flat_plan()
+    now = [0.0]
+    rng = np.random.default_rng(3)
+    svc = CurvatureService(max_batch=8, max_wait_us=100.0,
+                           clock=lambda: now[0], start=False,
+                           retune_min_points=8, retune_deadline_s=2.0,
+                           tune_dispatch=False)
+    for fut, a, v in _drive(svc, p, 4, 4, now, rng):
+        fut.result(60)
+    summary = svc.retune()
+    assert summary["queues_tuned"] == 1
+    rep = svc.tuning_report()[0]
+    assert 4 in rep["buckets"] and rep["buckets"][4]["tuned_us"] > 0
+    for fut, a, v in _drive(svc, p, 4, 2, now, rng):
+        np.testing.assert_allclose(fut.result(60), np.asarray(p.hvp(a, v)),
+                                   rtol=1e-4, atol=1e-5)
+    svc.shutdown()
+
+
+def test_pytree_and_mesh_queues_are_not_tuned():
+    def loss(params):
+        return jnp.sum(params["w"] ** 2) * jnp.sum(jnp.sin(params["b"]))
+    params = {"w": jnp.ones((3,), jnp.float32),
+              "b": jnp.ones((2,), jnp.float32)}
+    p = engine.plan(loss, None)
+    now, calls = [0.0], []
+    svc = CurvatureService(max_batch=8, max_wait_us=100.0,
+                           clock=lambda: now[0], start=False,
+                           tuner=_fake_tuner(calls), retune_min_points=1)
+    for _ in range(8):
+        svc.submit(p, params, params)
+        svc.flush()
+    summary = svc.retune()
+    assert summary["queues_examined"] == 0 and not calls
+    svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# per-request probe budgets (GGN/Hutchinson diag batching)
+# ---------------------------------------------------------------------------
+
+def _tree_point(seed=0):
+    rs = np.random.RandomState(seed)
+    return {"w": jnp.asarray(rs.randn(3, 3), jnp.float32),
+            "b": jnp.asarray(rs.randn(3), jnp.float32)}
+
+
+def _tree_loss(params):
+    w, b = params["w"], params["b"]
+    return jnp.sum((w @ w.T + b) ** 2) + jnp.sum(jnp.sin(b))
+
+
+def test_diag_probe_budgets_coalesce_into_one_bucket():
+    """Mixed budgets share one compiled program: a full-budget row equals
+    plan.diag EXACTLY; a budgeted row equals the direct budgeted estimate
+    over the same key-derived probe prefix."""
+    from repro.core.curvature import hutchinson_diag_budgeted
+    p = engine.plan(_tree_loss, None, csize=4, options={"n_probes": 8})
+    params = _tree_point()
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    with CurvatureService(max_batch=8, max_wait_us=100.0,
+                          start=False) as svc:
+        f_full = svc.submit(p, params, k1, workload="diag")
+        f_two = svc.submit(p, params, k2, workload="diag", n_probes=2)
+        f_cap = svc.submit(p, params, k3, workload="diag", n_probes=8)
+        svc.flush()
+        assert svc.stats()["batches"] == 1          # ONE coalesced bucket
+        r_full, r_two, r_cap = (f_full.result(60), f_two.result(60),
+                                f_cap.result(60))
+    for got, want in ((r_full, p.diag(params, k1)),
+                      (r_cap, p.diag(params, k3))):
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_allclose(a, np.asarray(b),
+                                       rtol=1e-4, atol=1e-5)
+    want_two = hutchinson_diag_budgeted(_tree_loss, params, k2, 2,
+                                        n_probes=8, csize=4)
+    for a, b in zip(jax.tree.leaves(r_two), jax.tree.leaves(want_two)):
+        np.testing.assert_allclose(a, np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_ggn_diag_budgeted_submits():
+    from repro.core.curvature import ggn_diag_budgeted
+
+    def model_fn(params):
+        return params["w"] @ jnp.ones((3,), jnp.float32) + params["b"]
+
+    def head_loss(z):
+        return jnp.sum(jnp.log1p(z ** 2))
+
+    p = engine.plan(lambda q: head_loss(model_fn(q)), None, csize=4,
+                    options={"n_probes": 8, "diag_of": "ggn",
+                             "model_fn": model_fn, "head_loss": head_loss})
+    params = _tree_point(1)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    with CurvatureService(max_batch=8, max_wait_us=100.0,
+                          start=False) as svc:
+        f_full = svc.submit(p, params, k1, workload="diag")
+        f_half = svc.submit(p, params, k2, workload="diag", n_probes=4)
+        svc.flush()
+        r_full, r_half = f_full.result(60), f_half.result(60)
+    for a, b in zip(jax.tree.leaves(r_full),
+                    jax.tree.leaves(p.diag(params, k1))):
+        np.testing.assert_allclose(a, np.asarray(b), rtol=1e-4, atol=1e-5)
+    want = ggn_diag_budgeted(model_fn, head_loss, params, k2, 4,
+                             n_probes=8, csize=4)
+    for a, b in zip(jax.tree.leaves(r_half), jax.tree.leaves(want)):
+        np.testing.assert_allclose(a, np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_probe_budget_validation():
+    p = engine.plan(_tree_loss, None, csize=4, options={"n_probes": 8})
+    params = _tree_point()
+    key = jax.random.PRNGKey(0)
+    flat = _flat_plan()
+    with CurvatureService(start=False) as svc:
+        with pytest.raises(ValueError, match="out of range"):
+            svc.submit(p, params, key, workload="diag", n_probes=9)
+        with pytest.raises(ValueError, match="out of range"):
+            svc.submit(p, params, key, workload="diag", n_probes=0)
+        with pytest.raises(ValueError, match="probe"):
+            svc.submit(p, params, params, n_probes=2)    # hvp submit
+        with pytest.raises(ValueError, match="probe"):
+            svc.submit(flat, np.zeros(N, np.float32),
+                       np.zeros(N, np.float32), n_probes=2)
+        svc.flush()
