@@ -25,6 +25,7 @@ SUITES = {
     "selftune": "benchmarks.selftune_bench",  # online bucket-aware autotune
     "distributed": "benchmarks.distributed_bench",  # L1 rows vs mesh shape
     "zoo": "benchmarks.zoo_bench",          # pytree workloads on zoo configs
+    "frontend": "benchmarks.frontend_bench",  # serving stack: cross-n + TCP
 }
 
 

@@ -1,5 +1,5 @@
 """The paper's headline workload as a SERVICE: many small clients, one
-device, one coalescing dispatcher.
+device, one coalescing dispatcher -- in-process AND over the network.
 
 The paper evaluates 0.5M independent HVPs as one pre-built batch (§7); a
 real serving deployment receives them as single-point requests from many
@@ -9,6 +9,13 @@ CurvatureService coalesces whatever is in flight into padded power-of-two
 micro-batches and executes them with the engine's cached batched
 executables.  Compare against ``--no-service`` (one-request-at-a-time
 plan.hvp calls) to see the coalescing win.
+
+After the in-process demo, the same service is exposed through the TCP
+front-end (``repro.serving.frontend``, line-delimited JSON): two socket
+clients fire MIXED-``n`` requests at a ``RaggedFamily`` plan, and the
+scheduler coalesces the different row widths into shared ragged buckets
+(watch ``ragged_batches`` in the printed stats).  Skip with
+``--no-frontend``.
 
     PYTHONPATH=src python examples/hvp_service.py --n 16 --clients 8 \
         --requests 256 --function ackley --backend auto --csize auto
@@ -84,6 +91,60 @@ def run_service(plan, A, V, clients, max_batch, max_wait_us):
     return results, dt, stats
 
 
+def run_frontend(args):
+    """The same service behind the network front-end, with mixed-n clients.
+
+    Shape-polymorphic functions are served as a RaggedFamily, so the two
+    clients' different row widths coalesce into shared ragged buckets."""
+    from repro.serving.frontend import CurvatureFrontend, connect
+    if args.function == "fletcher_powell":
+        print("  frontend demo: fletcher_powell has per-n coefficients "
+              "(no ragged family); skipping")
+        return
+    fam = testfns.ragged_family(args.function)
+    plans = {args.function: lambda n: engine.plan(fam, n, symmetric=False)}
+    ns = sorted({args.n, max(4, args.n // 2), args.n + args.n // 4})
+    rng = np.random.RandomState(1)
+    per_client = 32
+    with CurvatureFrontend(plans, max_batch=args.max_batch,
+                           max_wait_us=max(args.max_wait_us, 500.0)) as fe:
+        host, port = fe.address
+        print(f"  frontend on {host}:{port} serving {sorted(plans)} "
+              f"at n in {ns}")
+        errs = []
+
+        def client(cid):
+            with connect(host, port, client=f"client-{cid}") as cli:
+                futs = []
+                for i in range(per_client):
+                    n = ns[(cid + i) % len(ns)]
+                    a = rng.uniform(-2, 2, n).astype(np.float32)
+                    v = rng.uniform(-1, 1, n).astype(np.float32)
+                    futs.append((n, a, v,
+                                 cli.submit_hvp(args.function, a, v)))
+                for n, a, v, fut in futs:
+                    got = np.asarray(fut.result(timeout=60), np.float32)
+                    want = np.asarray(engine.plan(
+                        fam, n, symmetric=False).hvp(a, v))
+                    errs.append(float(np.max(np.abs(got - want))))
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        dt = time.perf_counter() - t0
+        stats = fe.service.stats()
+        total = 2 * per_client
+        print(f"  {total} socket round-trips in {dt * 1e3:.1f} ms "
+              f"({total / dt:,.0f} req/s) -- {stats['batches']} batches, "
+              f"{stats['ragged_batches']} ragged (cross-n), max |err| = "
+              f"{max(errs):.2e}")
+        print(f"  per-client telemetry: {engine.client_stats()}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--function", default="rosenbrock",
@@ -102,6 +163,8 @@ def main():
                     help=f"one of: auto, {', '.join(sorted(engine.list_backends()))}")
     ap.add_argument("--no-service", action="store_true",
                     help="sequential one-request-at-a-time baseline only")
+    ap.add_argument("--no-frontend", action="store_true",
+                    help="skip the network front-end demo")
     args = ap.parse_args()
 
     n, total = args.n, args.requests
@@ -143,6 +206,8 @@ def main():
                       for b, v in rec["by_bucket"].items()}
         print(f"  telemetry [{rec['backend']}/{rec['workload']}] "
               f"us/point by bucket: {per_bucket}")
+    if not args.no_frontend:
+        run_frontend(args)
 
 
 if __name__ == "__main__":

@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models.params import init_params
-from repro.serving import ServingEngine
+from repro.models.decode_engine import ServingEngine
 
 
 def main():

@@ -16,6 +16,7 @@ from . import hmath as hm
 from .hdual import HDual, _val
 
 __all__ = ["rosenbrock", "ackley", "fletcher_powell", "make_fletcher_powell",
+           "rosenbrock_masked", "ackley_masked", "ragged_family",
            "FUNCTIONS", "sample_point"]
 
 
@@ -34,6 +35,66 @@ def ackley(x):
     s1 = (x * x).sum(0) * (1.0 / n)
     s2 = hm.cos(x * (2.0 * math.pi)).sum(0) * (1.0 / n)
     return (hm.exp(hm.sqrt(s1) * -0.2) * -20.0) - hm.exp(s2) + (20.0 + math.e)
+
+
+# -- masked family forms (cross-n ragged serving, docs/serving.md) ----------
+#
+# ``<f>_masked(x_pad, n_eff)`` equals ``<f>(x_pad[:n_eff])`` for any traced
+# ``n_eff <= len(x_pad)``: every term past the effective prefix is
+# multiplied by an exact 0/1 mask, so the gradient and Hessian entries
+# outside the prefix are exactly zero and a padded HVP row sliced back to
+# ``n_eff`` entries is the exact per-n answer.  Written with jnp (not
+# hmath): the ``batched_hvp_ragged`` executable differentiates them with
+# jax's own jvp-of-grad, not the HDual sweeps.
+
+def rosenbrock_masked(x, n_eff):
+    """Rosenbrock on the first ``n_eff`` coordinates of a padded vector:
+    term k contributes iff k < n_eff - 1 (the per-n sum runs over pairs
+    (x_k, x_{k+1}) inside the prefix)."""
+    keep = (jnp.arange(x.shape[0] - 1) < n_eff - 1).astype(x.dtype)
+    xk = x[:-1]
+    xk1 = x[1:]
+    t1 = xk1 - xk * xk
+    t2 = 1.0 - xk
+    return (keep * (t1 * t1 * 100.0 + t2 * t2)).sum(0)
+
+
+def ackley_masked(x, n_eff):
+    """Ackley on the first ``n_eff`` coordinates: both means are masked
+    sums divided by the EFFECTIVE length (not the padded one)."""
+    keep = (jnp.arange(x.shape[0]) < n_eff).astype(x.dtype)
+    ne = jnp.asarray(n_eff).astype(x.dtype)
+    s1 = (keep * x * x).sum(0) / ne
+    s2 = (keep * jnp.cos(x * (2.0 * math.pi))).sum(0) / ne
+    return (jnp.exp(jnp.sqrt(s1) * -0.2) * -20.0) - jnp.exp(s2) \
+        + (20.0 + math.e)
+
+
+_RAGGED_FAMILIES: dict = {}
+
+
+def ragged_family(name: str):
+    """The shape-polymorphic ``RaggedFamily`` for a paper test function.
+
+    Plans built on the returned family (``engine.plan(ragged_family(
+    "rosenbrock"), n, ...)``) opt into the serving scheduler's cross-n
+    ragged coalescing.  Cached per name so independent clients get the
+    SAME family object -- family identity is what lets their plans share
+    ragged buckets and executables.  Fletcher-Powell has per-n coefficient
+    matrices (not one function at every n), so it has no family."""
+    if name not in _RAGGED_FAMILIES:
+        from repro.engine.plan import RaggedFamily
+        if name == "rosenbrock":
+            fam = RaggedFamily("rosenbrock", rosenbrock, rosenbrock_masked)
+        elif name == "ackley":
+            fam = RaggedFamily("ackley", ackley, ackley_masked)
+        else:
+            raise ValueError(
+                f"no ragged family for {name!r}: only the shape-polymorphic "
+                f"test functions (rosenbrock, ackley) serve every n with "
+                f"one function")
+        _RAGGED_FAMILIES[name] = fam
+    return _RAGGED_FAMILIES[name]
 
 
 _FP_CACHE: dict = {}

@@ -60,6 +60,15 @@ executables with zero dropped requests, and re-fits ``max_batch`` /
 ``max_wait_us`` from the measured arrival rate
 (``suggest_dispatch_knobs``).
 
+The service is a facade over the layered stack in ``repro.serving``
+(docs/serving.md): transport (TCP front-end, ``repro.serving.frontend``)
+-> admission (``AdmissionController``: per-client token buckets,
+priorities, high-water shedding with typed ``ServiceOverloaded``) ->
+scheduler (weighted-fair dequeue; cross-n ragged coalescing of
+``RaggedFamily`` plans gated by ``ragged_padding_waste``) -> dispatch
+(one worker per device).  ``submit(..., client=, priority=)`` tags
+requests for those layers; untagged traffic behaves exactly as before.
+
 Narrative docs: docs/architecture.md (plan/execute + service lifecycle),
 docs/backends.md (capability matrix), docs/workloads.md (workload-kind
 matrix incl. ggn/fisher and pytree serving), docs/autotune.md (csize
@@ -67,11 +76,12 @@ selection), docs/paper_map.md (paper section -> module).
 """
 
 from .plan import (CurvaturePlan, plan, clear_cache, trace_count,
-                   cache_size, bucket_size, pad_rows)
+                   cache_size, bucket_size, pad_rows, pad_cols,
+                   RaggedFamily)
 from .registry import (BackendSpec, register_backend, get_backend,
                        list_backends, resolve_backend, WORKLOADS,
                        record_execution, execution_stats, clear_telemetry,
-                       DTYPE_POLICIES, bucket_telemetry)
+                       DTYPE_POLICIES, bucket_telemetry, client_stats)
 from .opmodel import (model_csize, csize_candidates,
                       pruned_csize_candidates, mults_chunk_hess,
                       mults_schunk_hess, count_jaxpr_ops, LANE_WIDTH,
@@ -84,13 +94,14 @@ from .autotune import (autotune, autotune_csize, clear_autotune_cache,
                        autotune_buckets, BucketTunedConfig,
                        apply_bucket_config, verify_dtype_policy,
                        DtypePolicyRejected)
-from .opmodel import suggest_dispatch_knobs
+from .opmodel import suggest_dispatch_knobs, ragged_padding_waste
 from .service import (CurvatureService, ServiceClosed, ServiceQueueFull,
+                      ServiceOverloaded, AdmissionController, ClientPolicy,
                       get_service, configure_service, shutdown_service)
 
 __all__ = [
     "CurvaturePlan", "plan", "clear_cache", "trace_count", "cache_size",
-    "bucket_size", "pad_rows",
+    "bucket_size", "pad_rows", "pad_cols", "RaggedFamily",
     "BackendSpec", "register_backend", "get_backend", "list_backends",
     "resolve_backend", "WORKLOADS",
     "record_execution", "execution_stats", "clear_telemetry",
@@ -104,7 +115,9 @@ __all__ = [
     "store_path", "load_store", "save_store",
     "autotune_buckets", "BucketTunedConfig", "apply_bucket_config",
     "verify_dtype_policy", "DtypePolicyRejected", "DTYPE_POLICIES",
-    "suggest_dispatch_knobs", "bucket_telemetry",
+    "suggest_dispatch_knobs", "bucket_telemetry", "client_stats",
+    "ragged_padding_waste",
     "CurvatureService", "ServiceClosed", "ServiceQueueFull",
+    "ServiceOverloaded", "AdmissionController", "ClientPolicy",
     "get_service", "configure_service", "shutdown_service",
 ]

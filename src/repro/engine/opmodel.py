@@ -36,7 +36,7 @@ __all__ = [
     "mults_chunk_hess", "mults_schunk_hess", "exact_mults",
     "csize_candidates", "pruned_csize_candidates", "model_csize",
     "probe_chunk_cost", "probe_csize_candidates", "model_csize_probes",
-    "suggest_dispatch_knobs",
+    "suggest_dispatch_knobs", "ragged_padding_waste",
     "count_jaxpr_ops", "LANE_WIDTH",
 ]
 
@@ -234,6 +234,37 @@ def count_jaxpr_ops(n, csize, n_mults):
                        for v in eqn.outvars)
             counts[eqn.primitive.name] += size
     return counts
+
+
+def ragged_padding_waste(ns, n_pad=None):
+    """Fraction of a cross-``n`` ragged bucket's row work wasted on padding.
+
+    The scheduler may coalesce rows of effective dimension ``n_i`` from
+    several plan queues into one bucket padded to ``n_pad`` columns
+    (docs/serving.md).  The ``batched_hvp_ragged`` executable does dense
+    work proportional to the PADDED width per row (one masked
+    forward-over-reverse sweep over ``n_pad`` coordinates), so the wasted
+    fraction under a linear-in-``n`` row-work model is::
+
+        1 - sum(n_i) / (len(ns) * n_pad)
+
+    ``n_pad`` defaults to ``max(ns)`` (what the scheduler pads to).  The
+    scheduler gates each candidate merge on this value staying under its
+    ``coalesce_waste_max`` threshold: merging n=12 into an n=16 bucket
+    wastes 12.5% (almost always worth one fewer dispatch); merging n=4
+    into n=128 wastes ~48% (rejected at the default 0.4 threshold)."""
+    ns = [int(n) for n in ns]
+    if not ns:
+        raise ValueError("ragged_padding_waste: empty bucket")
+    if any(n < 1 for n in ns):
+        raise ValueError(f"ragged_padding_waste: row dims must be >= 1, "
+                         f"got {ns}")
+    if n_pad is None:
+        n_pad = max(ns)
+    elif n_pad < max(ns):
+        raise ValueError(
+            f"ragged_padding_waste: n_pad={n_pad} < max row dim {max(ns)}")
+    return 1.0 - sum(ns) / (len(ns) * float(n_pad))
 
 
 def _sanity():  # pragma: no cover - developer aid

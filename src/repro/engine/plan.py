@@ -43,7 +43,8 @@ from . import opmodel
 from .registry import resolve_backend
 
 __all__ = ["CurvaturePlan", "plan", "clear_cache", "trace_count",
-           "cache_size", "CACHE_MAXSIZE", "bucket_size", "pad_rows"]
+           "cache_size", "CACHE_MAXSIZE", "bucket_size", "pad_rows",
+           "pad_cols", "RaggedFamily"]
 
 # LRU-bounded: cache keys strong-reference f, so per-call closures (e.g.
 # block_hessian's f_of_block) would otherwise pin one jitted executable
@@ -124,6 +125,87 @@ def pad_rows(X, bucket: int):
         return X
     pad = xp.broadcast_to(X[-1:], (bucket - k,) + X.shape[1:])
     return xp.concatenate([X, pad], axis=0)
+
+
+def pad_cols(x, n_pad: int):
+    """Pad a flat (n,) vector up to ``n_pad`` entries by replicating the
+    last element -- the column-axis analogue of ``pad_rows``, used by the
+    scheduler's cross-``n`` ragged buckets.  Edge replication keeps the
+    padding inside the function's domain; the masked family objective is
+    independent of entries past ``n_eff`` anyway, so padded coordinates
+    contribute exactly zero to the Hessian block that is read back."""
+    import numpy as np
+    if isinstance(x, np.ndarray):
+        xp = np
+    else:
+        import jax.numpy as xp
+        x = xp.asarray(x)
+    n = x.shape[0]
+    if n > n_pad:
+        raise ValueError(f"pad_cols: {n} entries exceed n_pad {n_pad}")
+    if n == n_pad:
+        return x
+    pad = xp.broadcast_to(x[-1:], (n_pad - n,) + x.shape[1:])
+    return xp.concatenate([x, pad], axis=0)
+
+
+class RaggedFamily:
+    """A shape-polymorphic objective family: one function served at any n.
+
+    Cross-``n`` ragged coalescing (docs/serving.md) needs more than a
+    callable per ``n`` -- it needs the *masked* form ``masked(x_pad,
+    n_eff)`` that equals ``fn(x_pad[:n_eff])`` for every ``n_eff <=
+    len(x_pad)`` with ``n_eff`` traced.  Because the masking is
+    multiplicative (terms past the effective prefix multiplied by an
+    exact 0), the gradient and Hessian entries outside the prefix are
+    exactly zero, so a padded-``n`` HVP row sliced back to ``n_eff``
+    entries is the exact per-``n`` answer -- that is what the
+    ``batched_hvp_ragged`` workload executes.
+
+    ``name`` is the family's identity: two ``RaggedFamily`` objects with
+    the same name hash and compare equal (so plans built by independent
+    clients coalesce), which also means names must be globally unique per
+    distinct function.  The family is itself callable (``fam(x)`` ==
+    ``fn(x)``), so it is passed directly as a plan's ``f``; ``plan()``
+    auto-injects the ``ragged_family`` option for such plans, which is
+    the scheduler's opt-in signal for cross-``n`` bucketing.
+
+    ``masked=None`` derives a default by zero-masking the input
+    (``fn(x * (iota < n_eff))``) -- only correct for families where a
+    zero tail reproduces the prefix value AND stays differentiable there
+    (e.g. plain quadratics; NOT Ackley, whose mean spans the full length
+    and whose sqrt is singular at 0).  The paper test functions ship
+    hand-written masked forms in ``core/testfns.ragged_family``.
+    """
+
+    __slots__ = ("name", "fn", "masked")
+
+    def __init__(self, name: str, fn: Callable,
+                 masked: Optional[Callable] = None):
+        self.name = str(name)
+        self.fn = fn
+        if masked is None:
+            def masked(x, n_eff, _fn=fn):
+                import jax.numpy as jnp
+                keep = (jnp.arange(x.shape[0]) < n_eff).astype(x.dtype)
+                return _fn(x * keep)
+        self.masked = masked
+
+    @property
+    def __name__(self) -> str:          # describe() / telemetry labels
+        return f"ragged:{self.name}"
+
+    def __call__(self, x):
+        return self.fn(x)
+
+    def __hash__(self):
+        return hash(("RaggedFamily", self.name))
+
+    def __eq__(self, other):
+        return isinstance(other, RaggedFamily) and other.name == self.name
+
+    def __repr__(self):
+        return f"RaggedFamily({self.name!r})"
 
 
 @dataclass(frozen=True)
@@ -352,6 +434,11 @@ def plan(f, n=None, m=None, csize="auto", backend="auto", symmetric=True,
     """
     opts = dict(options or {})
     opts.update(extra_options)
+    if isinstance(f, RaggedFamily) and n is not None:
+        # a family-built flat plan is implicitly coalescible across n:
+        # the option is the scheduler's opt-in signal and part of the
+        # cache/telemetry signature (hashable -- families hash by name)
+        opts.setdefault("ragged_family", f)
     policy = opts.get("dtype_policy")
     if policy is not None:
         # fail at PLAN time: an unknown policy is a typo, and fp64 duals

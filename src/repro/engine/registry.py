@@ -20,6 +20,11 @@ Workloads (positional array signatures of the produced callable):
                                            needs the per_example_fn option
   "batched_diag"    (A, K) -> (m, size)    coalesced pytree diag: raveled
                                            param rows + PRNG-key rows
+  "batched_hvp_ragged" (A, V, NE) -> R     mixed-n HVP rows padded to one
+                                           (m, n_pad) bucket; NE carries
+                                           each row's effective dimension
+                                           (needs the ragged_family option;
+                                           see docs/serving.md)
 
 Flat backends (``flat_only=True``) require ``plan.n`` to be a concrete int;
 pytree backends accept arbitrary parameter trees and are selected when
@@ -42,10 +47,12 @@ __all__ = [
     "resolve_backend", "WORKLOADS",
     "record_execution", "execution_stats", "clear_telemetry",
     "DTYPE_POLICIES", "policy_compute_dtype", "bucket_telemetry",
+    "client_stats",
 ]
 
 WORKLOADS = ("hvp", "hessian", "batched_hvp", "batched_hessian", "diag",
-             "quadform", "ggn", "fisher", "batched_diag")
+             "quadform", "ggn", "fisher", "batched_diag",
+             "batched_hvp_ragged")
 
 # dual-number dtype policies (the HomebrewNLP-style host/dtype dial made a
 # plan option): "fp32" runs the hDual sweeps in the input dtype (default),
@@ -181,16 +188,26 @@ _TELEMETRY_DRIFT = 1.05              # upward best drift tolerated silently
 _BUCKET_RECENT = 32                  # timestamped window per (sig, bucket)
 
 
+# per-client serving totals (PR 9): the dispatcher tags every executed
+# bucket with the clients whose rows it carried, so operators can read who
+# the service is actually working for (points = real rows served, batches =
+# buckets the client had at least one row in).  Aggregated service-wide --
+# the per-signature tags live on the telemetry entries ("by_client").
+_CLIENT_TOTALS: dict = {}
+
+
 def clear_telemetry() -> None:
     global _TELEMETRY_VERSION
     with _TELEMETRY_LOCK:
         _TELEMETRY.clear()
+        _CLIENT_TOTALS.clear()
         _TELEMETRY_VERSION += 1
 
 
 def record_execution(signature, backend: str, workload: str, *,
                      bucket: int, n_points: int, elapsed_s: float,
-                     now: Optional[float] = None) -> None:
+                     now: Optional[float] = None,
+                     clients: Optional[dict] = None) -> None:
     """Record one executed bucket: ``n_points`` real points served by an
     executable padded to ``bucket`` rows in ``elapsed_s`` seconds.
 
@@ -204,7 +221,12 @@ def record_execution(signature, backend: str, workload: str, *,
     each inflated by ``2 ** (age / _TELEMETRY_HALFLIFE_S)``.  A transient
     outlier therefore un-pins once the observation window rolls past it
     (or it ages out), instead of steering ``backend="auto"`` forever.
-    ``now`` injects a clock for deterministic tests."""
+    ``now`` injects a clock for deterministic tests.
+
+    ``clients`` optionally tags the bucket with ``{client_id: row_count}``
+    (the serving dispatcher passes the per-client row mix): tags
+    accumulate on the signature entry (``by_client``) and service-wide
+    (``client_stats()``)."""
     global _TELEMETRY_VERSION
     if n_points <= 0:
         return
@@ -229,6 +251,14 @@ def record_execution(signature, backend: str, workload: str, *,
         recent_b = entry.setdefault("by_bucket_recent", {}).setdefault(
             int(bucket), collections.deque(maxlen=_BUCKET_RECENT))
         recent_b.append((float(us_per_point), t))
+        if clients:
+            by_client = entry.setdefault("by_client", collections.Counter())
+            for cid, rows in clients.items():
+                by_client[cid] += int(rows)
+                tot = _CLIENT_TOTALS.setdefault(
+                    cid, {"points": 0, "batches": 0})
+                tot["points"] += int(rows)
+                tot["batches"] += 1
         entry["recent"].append((float(us_per_point), t))
         best = min(us * 2.0 ** (max(0.0, t - ts) / _TELEMETRY_HALFLIFE_S)
                    for us, ts in entry["recent"])
@@ -264,6 +294,15 @@ def execution_stats() -> list[dict]:
         out.append({"signature": sig, "backend": entry["backend"],
                     "workload": entry["workload"], "by_bucket": buckets})
     return out
+
+
+def client_stats() -> dict:
+    """Service-wide per-client serving totals: ``{client_id: {"points",
+    "batches"}}`` accumulated from every ``record_execution`` call that
+    carried client tags (the serving dispatcher tags each bucket with the
+    clients whose rows it coalesced).  Cleared by ``clear_telemetry``."""
+    with _TELEMETRY_LOCK:
+        return {cid: dict(tot) for cid, tot in _CLIENT_TOTALS.items()}
 
 
 def bucket_telemetry(signature) -> dict:

@@ -3,10 +3,22 @@
 The paper's headline result is 0.5M *independent* HVPs evaluated as one
 batched program (§6-7); in a serving setting those arrive as many small
 requests from many clients, not one pre-built (m, n) array.  This module is
-the batching layer between the two: ``plan.submit(a, v)`` returns a future,
-requests accumulate in a bounded per-plan queue, and a dispatcher thread
-coalesces them into padded power-of-two micro-batches executed via the
-plan's ordinary cached ``batched_hvp`` / ``batched_hessian`` executables.
+the compatibility facade over the layered serving stack that bridges the
+two (``repro.serving``, docs/serving.md):
+
+  transport  (serving/frontend.py)  line-delimited JSON over TCP; optional
+  admission  (serving/admission.py) per-client token buckets, priority
+                                    classes, high-water load shedding
+  scheduler  (serving/scheduler.py) bounded per-plan queues, micro-bucket
+                                    triggers, weighted-fair dequeue,
+                                    cross-n ragged coalescing
+  dispatch   (serving/dispatch.py)  worker threads (one per device) that
+                                    execute buckets and resolve futures
+
+``plan.submit(a, v)`` returns a future, requests accumulate in a bounded
+per-plan queue, and dispatch workers coalesce them into padded
+power-of-two micro-batches executed via the plan's ordinary cached
+``batched_hvp`` / ``batched_hessian`` executables.
 
 Pytree plans coalesce the same way (PR 7): requests are keyed on the
 parameter TREEDEF (engine/pytree.py), raveled to one host row each at
@@ -15,6 +27,14 @@ device transfer per bucket), and executed by the pytree backend's
 ``batched_hvp`` / ``batched_diag`` executables; futures resolve to host
 numpy pytrees.  Mixed-treedef traffic lands in separate queues because the
 spec is part of the derived plan's cache signature.
+
+Flat HVP plans built on a ``RaggedFamily`` (``engine.plan.RaggedFamily``,
+``core.testfns.ragged_family``) additionally coalesce ACROSS row widths:
+when a partial bucket dispatches, the scheduler tops it up with requests
+of other ``n`` from the same family, pads every row to ``n_pad = max(n)``
+and runs the family's masked ``batched_hvp_ragged`` executable -- gated by
+the ``opmodel.ragged_padding_waste`` model so merging never pays more than
+``coalesce_waste_max`` padding.  See docs/serving.md for the algebra.
 
 Why power-of-two buckets: jit re-specializes per batch shape, so serving
 raw request counts would compile one program per observed count.  Padding
@@ -34,15 +54,16 @@ The two knobs are the classic latency/throughput dial:
                 fuller buckets.
 
 Every executed bucket is reported to ``registry.record_execution`` --
-measured us/point per (plan signature, bucket) -- and PR 8 closes the loop:
-the service can TUNE ITSELF against that history.  With
-``retune_interval_s`` set, a background re-tune thread watches each flat
-plan queue's live traffic (arrival rate, bucket mix, per-bucket us/point
-from ``registry.bucket_telemetry``) and, when the mix shifts to untuned
+measured us/point per (plan signature, bucket), with per-client row counts
+when requests carry a ``client=`` tag -- and PR 8 closes the loop: the
+service can TUNE ITSELF against that history.  With ``retune_interval_s``
+set, a background re-tune thread watches each flat plan queue's live
+traffic (arrival rate, bucket mix, per-bucket us/point from
+``registry.bucket_telemetry``) and, when the mix shifts to untuned
 buckets or a tuned bucket drifts past ``drift_factor`` x its learned
 baseline, re-runs the joint (csize, backend, blk_m, dtype_policy) sweep of
 ``autotune.autotune_buckets`` at the OBSERVED bucket shapes.  Winners are
-hot-swapped per bucket (``_PlanQueue.exec_by_bucket``) under the service
+hot-swapped per bucket (``PlanQueue.exec_by_bucket``) under the service
 lock -- queued requests are untouched and in-flight futures resolve
 normally, so no request is ever dropped by a re-tune -- and the same
 learned store drives the dispatcher knobs via
@@ -69,8 +90,13 @@ Usage::
     with engine.CurvatureService(max_batch=64, max_wait_us=500) as svc:
         fut = svc.submit(p, a, v)
 
+    # admission-controlled, client-tagged serving:
+    adm = engine.AdmissionController(high_water=1024)
+    with engine.CurvatureService(admission=adm) as svc:
+        fut = svc.submit(p, a, v, client="trainer-0", priority="interactive")
+
 Determinism for tests: construct with ``start=False`` and drive the
-dispatcher by hand with ``poll()`` / ``flush()``; pass ``clock=`` a fake
+dispatch by hand with ``poll()`` / ``flush()``; pass ``clock=`` a fake
 monotonic clock to test the wait-budget logic without sleeping.
 """
 
@@ -79,20 +105,18 @@ from __future__ import annotations
 import collections
 import threading
 import time
-from concurrent.futures import Future
-from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.serving.admission import (DEFAULT_PRIORITY, AdmissionController,
+                                     ClientPolicy, ServiceClosed,
+                                     ServiceOverloaded, ServiceQueueFull)
 
 from . import opmodel, registry
-from .plan import CurvaturePlan, bucket_size, pad_rows
-from .pytree import PytreeSpec, spec_of
+from .plan import CurvaturePlan
 
 __all__ = [
     "CurvatureService", "ServiceClosed", "ServiceQueueFull",
+    "ServiceOverloaded", "AdmissionController", "ClientPolicy",
     "get_service", "configure_service", "shutdown_service",
     "DEFAULT_MAX_BATCH", "DEFAULT_MAX_WAIT_US", "DEFAULT_MAX_QUEUE",
 ]
@@ -102,67 +126,27 @@ DEFAULT_MAX_WAIT_US = 200.0
 DEFAULT_MAX_QUEUE = 4096
 
 
-class ServiceClosed(RuntimeError):
-    """Submit after shutdown, or pending work cancelled by shutdown."""
-
-
-class ServiceQueueFull(RuntimeError):
-    """Bounded queue is full and the caller declined to wait."""
-
-
-@dataclass
-class _Request:
-    a: Any
-    v: Any                       # None => hessian workload
-    future: Future
-    t_submit: float              # service clock, for the wait budget
-    p: Optional[int] = None      # per-request probe budget (diag only)
-
-
-@dataclass
-class _PlanQueue:
-    """Pending requests sharing one (plan signature, workload).
-
-    For pytree plans ``plan`` is the spec-carrying derived plan (the
-    submitted plan plus a ``pytree_spec`` option) and ``spec`` is that
-    spec: requests with different treedefs derive different plans, hence
-    different cache keys, hence DIFFERENT queues -- mixed-treedef traffic
-    can never be stacked into one bucket."""
-    plan: CurvaturePlan
-    workload: str                # "batched_hvp" | "batched_hessian"
-                                 # | "batched_diag" (pytree)
-    backend: str
-    key: tuple                   # the plan's executable cache key (also the
-                                 # _queues index and the telemetry key)
-    spec: Optional[PytreeSpec] = None    # set for pytree queues
-    requests: collections.deque = field(default_factory=collections.deque)
-    # -- online-tuning state (flat queues only; all guarded by the service
-    # lock).  ``exec_by_bucket`` maps bucket -> (derived plan, backend name,
-    # telemetry key): the hot-swapped winner executable for that bucket.
-    # ``tuned_us`` keeps the winner's tuned us/point baseline for drift
-    # detection; ``max_batch``/``max_wait_us`` are learned per-queue
-    # dispatcher-knob overrides (None = service defaults).  ``arrivals``
-    # is a sliding window of submit timestamps (arrival-rate estimate) and
-    # ``epoch_counts`` the per-bucket point counts since the last re-tune
-    # pass (the observed traffic mix the tuner sweeps against).
-    exec_by_bucket: dict = field(default_factory=dict)
-    tuned_us: dict = field(default_factory=dict)
-    max_batch: Optional[int] = None
-    max_wait_us: Optional[float] = None
-    arrivals: collections.deque = field(
-        default_factory=lambda: collections.deque(maxlen=256))
-    epoch_counts: collections.Counter = field(
-        default_factory=collections.Counter)
-    epoch_points: int = 0
+def __getattr__(name):
+    # legacy aliases for the pre-layering private types (now in
+    # repro.serving.scheduler); resolved lazily to keep plain
+    # ``import repro.engine`` from paying for the serving stack
+    if name in ("_Request", "_PlanQueue"):
+        from repro.serving import scheduler as _sched
+        return {"_Request": _sched.Request,
+                "_PlanQueue": _sched.PlanQueue}[name]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 class CurvatureService:
     """Coalesces single-point curvature requests into micro-batches.
 
-    One dispatcher thread serves any number of plans: requests are keyed on
-    the plan's executable cache signature, so two plan objects with the same
-    static signature share a queue (and the same compiled program).  All
-    public methods are thread-safe.
+    A thin facade wiring the serving layers together: an optional
+    ``AdmissionController`` (rate limits / shedding), the ``Scheduler``
+    (queues, fairness, cross-n coalescing) and the ``Dispatcher`` (worker
+    threads, one per local device).  Requests are keyed on the plan's
+    executable cache signature, so two plan objects with the same static
+    signature share a queue (and the same compiled program).  All public
+    methods are thread-safe.
     """
 
     def __init__(self, *, max_batch: int = DEFAULT_MAX_BATCH,
@@ -170,6 +154,10 @@ class CurvatureService:
                  max_queue: int = DEFAULT_MAX_QUEUE,
                  clock: Callable[[], float] = time.monotonic,
                  start: bool = True,
+                 admission: Optional[AdmissionController] = None,
+                 workers: Optional[int] = None,
+                 coalesce_across_n: bool = True,
+                 coalesce_waste_max: float = 0.4,
                  retune_interval_s: Optional[float] = None,
                  retune_deadline_s: float = 1.0,
                  retune_min_points: int = 32,
@@ -178,7 +166,23 @@ class CurvatureService:
                  wait_cap_us: float = 5000.0,
                  tuner: Optional[Callable] = None,
                  tune_dispatch: bool = True):
-        """Online-tuning knobs (all optional; tuning is OFF by default):
+        """Serving knobs:
+
+        admission : optional ``AdmissionController`` -- per-client token
+            buckets, priority-aware load shedding at its ``high_water``
+            depth (wired to this service's live queue depth), and the
+            per-client fair-dequeue weights.  None admits everything.
+        workers : dispatch worker threads.  None (default) = one per jax
+            local device; an int pins the pool size (workers cycle over
+            the devices).
+        coalesce_across_n : allow mixed-n ragged buckets for plans built
+            on a ``RaggedFamily`` (cross-n coalescing OFF turns every
+            queue back into the per-n dispatch of PR 7/8).
+        coalesce_waste_max : padding-waste ceiling for a merged ragged
+            bucket (``opmodel.ragged_padding_waste``); candidates that
+            would push waste past this are left in their own queue.
+
+        Online-tuning knobs (all optional; tuning is OFF by default):
 
         retune_interval_s : period of the background re-tune thread.  None
             (default) disables the thread -- ``retune()`` can still be
@@ -210,9 +214,15 @@ class CurvatureService:
             raise ValueError(
                 f"retune_interval_s={retune_interval_s} must be > 0 (or "
                 f"None to disable the re-tune thread)")
-        self.max_batch = int(max_batch)
-        self.max_wait_us = float(max_wait_us)
-        self.max_queue = int(max_queue)
+        if not 0.0 <= coalesce_waste_max < 1.0:
+            raise ValueError(
+                f"coalesce_waste_max={coalesce_waste_max} must be in "
+                f"[0, 1)")
+        # the serving layers import engine.plan/registry/opmodel; importing
+        # them lazily here keeps `import repro.engine` cycle-free and free
+        # of serving machinery until a service is actually constructed
+        from repro.serving.dispatch import Dispatcher
+        from repro.serving.scheduler import Scheduler
         self.retune_interval_s = retune_interval_s
         self.retune_deadline_s = float(retune_deadline_s)
         self.retune_min_points = int(retune_min_points)
@@ -222,40 +232,94 @@ class CurvatureService:
         self.tune_dispatch = bool(tune_dispatch)
         self._tuner = tuner
         self._clock = clock
-        self._lock = threading.Lock()
-        self._space = threading.Condition(self._lock)   # queue-full waiters
-        self._wake = threading.Event()                  # dispatcher nudge
-        self._queues: dict = collections.OrderedDict()  # key -> _PlanQueue
-        # (id(plan), workload) -> (backend, key); holds a strong plan ref in
-        # the value so the id stays valid.  Saves a registry resolve + plan
-        # hash per submit on the hot path.
-        self._routes: dict = {}
-        self._pending = 0
-        self._closed = False
+        self.admission = admission
         self._stats = {"submitted": 0, "dispatched": 0, "batches": 0,
                        "padded_rows": 0, "retunes": 0, "retune_errors": 0,
-                       "hot_swaps": 0,
+                       "hot_swaps": 0, "ragged_batches": 0,
+                       "ragged_points": 0,
                        "buckets": collections.Counter()}
-        self._thread: Optional[threading.Thread] = None
+        self._sched = Scheduler(
+            max_batch=max_batch, max_wait_us=max_wait_us,
+            max_queue=max_queue, clock=clock, stats=self._stats,
+            admission=admission, coalesce_across_n=coalesce_across_n,
+            coalesce_waste_max=coalesce_waste_max)
+        self._dispatcher = Dispatcher(self._sched, workers=workers)
         self._retune_stop = threading.Event()
         self._retune_thread: Optional[threading.Thread] = None
         if start:
-            self._thread = threading.Thread(
-                target=self._dispatch_loop, name="curvature-service",
-                daemon=True)
-            self._thread.start()
+            self._dispatcher.start()
             if self.retune_interval_s is not None:
                 self._retune_thread = threading.Thread(
                     target=self._retune_loop, name="curvature-retune",
                     daemon=True)
                 self._retune_thread.start()
 
+    # -- shared-state views (scheduler owns the lock and the queues) --------
+
+    @property
+    def max_batch(self) -> int:
+        return self._sched.max_batch
+
+    @max_batch.setter
+    def max_batch(self, v) -> None:
+        self._sched.max_batch = int(v)
+
+    @property
+    def max_wait_us(self) -> float:
+        return self._sched.max_wait_us
+
+    @max_wait_us.setter
+    def max_wait_us(self, v) -> None:
+        self._sched.max_wait_us = float(v)
+
+    @property
+    def max_queue(self) -> int:
+        return self._sched.max_queue
+
+    @max_queue.setter
+    def max_queue(self, v) -> None:
+        self._sched.max_queue = int(v)
+
+    @property
+    def _lock(self):
+        return self._sched.lock
+
+    @property
+    def _space(self):
+        return self._sched.space
+
+    @property
+    def _wake(self):
+        return self._sched.wake
+
+    @property
+    def _queues(self):
+        return self._sched.queues
+
+    @property
+    def _pending(self) -> int:
+        return self._sched.pending
+
+    @property
+    def _closed(self) -> bool:
+        return self._sched.closed
+
+    @property
+    def _thread(self) -> Optional[threading.Thread]:
+        """First dispatch worker (None for start=False services) --
+        pre-layering compatibility: benchmarks/tests probe this to decide
+        whether to drive the service inline."""
+        ts = self._dispatcher.threads
+        return ts[0] if ts else None
+
     # -- client side --------------------------------------------------------
 
     def submit(self, plan: CurvaturePlan, a, v=None, *,
                workload: Optional[str] = None,
                n_probes: Optional[int] = None, block: bool = True,
-               timeout: Optional[float] = None) -> Future:
+               timeout: Optional[float] = None,
+               client: Optional[str] = None,
+               priority: str = DEFAULT_PRIORITY):
         """Enqueue one request; returns a Future of the single-point result.
 
         Flat plans (``plan.n`` an int):
@@ -276,6 +340,14 @@ class CurvatureService:
         masks probe chunks past each row's budget, so mixed budgets share
         one compiled program.  Default (None) is the plan's full budget.
 
+        ``client`` / ``priority`` tag the request for the admission and
+        fairness layers: an ``AdmissionController`` (if configured) may
+        refuse with ``ServiceOverloaded`` (rate limit or high-water load
+        shedding), ``priority="interactive"`` requests drain strictly
+        before ``"batch"`` ones, and clients inside one queue are served
+        by weighted fair round-robin.  Untagged submits behave exactly as
+        before the layering.
+
         Results are host numpy arrays / pytrees of them (the serving
         payload); inputs are host-marshalled too, so numpy inputs are the
         fast path.
@@ -284,154 +356,11 @@ class CurvatureService:
         call blocks until space frees (``timeout`` seconds at most), or
         raises ``ServiceQueueFull`` immediately when ``block=False``.
         """
-        p = None
-        if plan.n is None:
-            dplan, workload, backend, key, spec, a, v, p = \
-                self._marshal_pytree(plan, a, v, workload, n_probes)
-        else:
-            if workload is not None:
-                raise ValueError(
-                    "workload= selects the pytree workload; flat plans "
-                    "infer it from the arguments (v given -> hvp)")
-            if n_probes is not None:
-                raise ValueError(
-                    "n_probes= is a probe budget for pytree diag submits; "
-                    "flat HVP/Hessian requests have no probe axis")
-            dplan, spec = plan, None
-            workload = "batched_hvp" if v is not None else "batched_hessian"
-            route = self._routes.get((id(plan), workload))
-            if route is None:
-                backend = plan.backend_for(workload)
-                key = plan.cache_key(workload, backend)
-                if len(self._routes) > 4 * max(len(self._queues), 64):
-                    self._routes.clear()  # id-reuse guard, keeps dict small
-                route = self._routes[(id(plan), workload)] = (plan, backend,
-                                                              key)
-            _plan_ref, backend, key = route
-            # marshal on the HOST: requests are stacked with np.stack and
-            # shipped to the device as ONE array per bucket -- stacking k
-            # device-resident rows instead costs one dispatch per row
-            # (~100x slower on CPU jax)
-            a = np.asarray(a)
-            if a.shape != (plan.n,):
-                raise ValueError(
-                    f"submit expects a single point of shape ({plan.n},), "
-                    f"got {a.shape}; batched arrays go through "
-                    f"plan.{workload}")
-            if v is not None:
-                v = np.asarray(v)
-                if v.shape != (plan.n,):
-                    raise ValueError(
-                        f"submit expects v of shape ({plan.n},), got "
-                        f"{v.shape}")
-        fut: Future = Future()
-        with self._space:
-            if self._closed:
-                raise ServiceClosed("CurvatureService is shut down")
-            if self._pending >= self.max_queue:
-                if not block:
-                    raise ServiceQueueFull(
-                        f"{self._pending} requests pending "
-                        f"(max_queue={self.max_queue})")
-                ok = self._space.wait_for(
-                    lambda: self._closed or self._pending < self.max_queue,
-                    timeout)
-                if self._closed:
-                    raise ServiceClosed("CurvatureService is shut down")
-                if not ok:
-                    raise ServiceQueueFull(
-                        f"queue still full after {timeout}s "
-                        f"(max_queue={self.max_queue})")
-            q = self._queues.get(key)
-            if q is None:
-                q = _PlanQueue(plan=dplan, workload=workload,
-                               backend=backend, key=key, spec=spec)
-                self._queues[key] = q
-            t = self._clock()
-            q.requests.append(_Request(a, v, fut, t, p))
-            q.arrivals.append(t)        # rate window for the knob model
-            self._pending += 1
-            self._stats["submitted"] += 1
-            # wake the dispatcher only on the transitions it cares about: a
-            # previously-empty service (it may be in an unbounded wait) or a
-            # queue reaching a full bucket (dispatch now, not at deadline).
-            # Anything in between is already covered by its deadline timer,
-            # and an Event.set per submit costs a lock on the hot path.
-            nudge = (self._pending == 1
-                     or len(q.requests) >= (q.max_batch or self.max_batch))
-        if nudge:
-            self._wake.set()
-        return fut
+        return self._sched.submit(
+            plan, a, v, workload=workload, n_probes=n_probes, block=block,
+            timeout=timeout, client=client, priority=priority)
 
-    def _marshal_pytree(self, plan: CurvaturePlan, a, v, workload, n_probes):
-        """Resolve and host-marshal one pytree request.
-
-        Coalescing key: a derived plan carrying the request's PytreeSpec as
-        an option, so the ordinary executable cache / telemetry signature
-        machinery separates treedefs.  The params (and tangent) trees ravel
-        to one host row each; PRNG keys pass through as raw key-data rows.
-        Returns (derived plan, batched workload, backend, cache key, spec,
-        a_row, v_row, probe budget)."""
-        if workload in (None, "hvp"):
-            if v is None:
-                raise ValueError(
-                    "pytree submits coalesce HVPs -- submit(plan, params, "
-                    "v) -- or Hutchinson diag -- submit(plan, params, key, "
-                    "workload='diag'); dense pytree Hessians are not a "
-                    "service workload")
-            if n_probes is not None:
-                raise ValueError(
-                    "n_probes= is a diag probe budget; HVP submits have "
-                    "no probe axis")
-            workload = "batched_hvp"
-        elif workload == "diag":
-            if v is None:
-                raise ValueError(
-                    "workload='diag' needs the probe PRNG key as the "
-                    "second argument: submit(plan, params, key, "
-                    "workload='diag')")
-            cap = int(plan.opt("n_probes", 4))
-            if n_probes is None:
-                n_probes = cap
-            else:
-                n_probes = int(n_probes)
-                if not 1 <= n_probes <= cap:
-                    raise ValueError(
-                        f"n_probes={n_probes} out of range: the plan's "
-                        f"probe budget is 1..{cap} (its n_probes option "
-                        f"caps the shared compiled program)")
-            workload = "batched_diag"
-        else:
-            raise ValueError(
-                f"pytree submits support workload 'hvp' or 'diag', got "
-                f"{workload!r}")
-        spec = spec_of(a)
-        route_key = (id(plan), workload, spec)
-        route = self._routes.get(route_key)
-        if route is None:
-            import dataclasses
-            opts = dict(plan.options)
-            opts["pytree_spec"] = spec
-            dplan = dataclasses.replace(
-                plan, options=tuple(sorted(opts.items())))
-            backend = dplan.backend_for(workload)
-            key = dplan.cache_key(workload, backend)
-            if len(self._routes) > 4 * max(len(self._queues), 64):
-                self._routes.clear()
-            route = self._routes[route_key] = (plan, dplan, backend, key)
-        _plan_ref, dplan, backend, key = route
-        a_row = spec.ravel(a)               # validates treedef + shapes
-        if workload == "batched_hvp":
-            v_row = spec.ravel(v)           # tangent must match the params
-        else:
-            dt = getattr(v, "dtype", None)
-            if dt is not None and jax.dtypes.issubdtype(dt,
-                                                        jax.dtypes.prng_key):
-                v = jax.random.key_data(v)   # typed keys -> raw key data
-            v_row = np.asarray(v)
-        return dplan, workload, backend, key, spec, a_row, v_row, n_probes
-
-    # -- dispatcher side ----------------------------------------------------
+    # -- dispatch side ------------------------------------------------------
 
     def poll(self, now: Optional[float] = None) -> int:
         """One dispatch pass; returns the number of requests dispatched.
@@ -441,156 +370,24 @@ class CurvatureService:
         ``max_wait_us`` budget at time ``now`` (service clock).  Public so
         tests (and ``start=False`` embeddings) can drive the service
         deterministically."""
-        if now is None:
-            now = self._clock()
-        dispatched = 0
-        while True:
-            batch = self._take_ready_batch(now)
-            if batch is None:
-                return dispatched
-            q, reqs = batch
-            self._execute(q, reqs)
-            dispatched += len(reqs)
+        return self._dispatcher.run_once(now=now)
 
     def flush(self) -> int:
         """Dispatch everything pending regardless of age; returns count."""
-        dispatched = 0
-        while True:
-            batch = self._take_ready_batch(now=None, force=True)
-            if batch is None:
-                return dispatched
-            q, reqs = batch
-            self._execute(q, reqs)
-            dispatched += len(reqs)
+        return self._dispatcher.run_once(force=True)
 
     def _take_ready_batch(self, now, force: bool = False):
-        """Pop up to max_batch requests from the first ready queue.
+        return self._sched.take_ready_batch(now, force=force)
 
-        The served queue rotates to the back (round-robin), so one
-        continuously-full plan queue cannot starve the others past their
-        wait budget."""
-        with self._space:
-            for key, q in list(self._queues.items()):
-                if not q.requests:
-                    continue
-                # learned per-queue dispatcher knobs override the service
-                # defaults once the re-tune loop has fit them
-                eff_batch = q.max_batch or self.max_batch
-                eff_wait = (q.max_wait_us if q.max_wait_us is not None
-                            else self.max_wait_us)
-                full = len(q.requests) >= eff_batch
-                if not (force or full):
-                    age_us = (now - q.requests[0].t_submit) * 1e6
-                    if age_us < eff_wait:
-                        continue
-                k = min(len(q.requests), eff_batch)
-                reqs = [q.requests.popleft() for _ in range(k)]
-                self._pending -= k
-                self._queues.move_to_end(key)
-                self._space.notify_all()
-                return q, reqs
-            return None
-
-    def _execute(self, q: _PlanQueue, reqs) -> None:
-        """Run one coalesced bucket and resolve its futures."""
-        live = [r for r in reqs if r.future.set_running_or_notify_cancel()]
-        if not live:
-            return
-        k = len(live)
-        bucket = bucket_size(k, self.max_batch)
-        # per-bucket hot-swap: the re-tune loop installs winner executables
-        # keyed by bucket; requests queued before a swap still execute (on
-        # the new winner) and their futures resolve -- nothing is dropped.
-        with self._lock:
-            tuned = q.exec_by_bucket.get(bucket)
-        xplan, xbackend, xkey = tuned if tuned is not None \
-            else (q.plan, q.backend, q.key)
-        try:
-            # marshal BOTH operands before t0: telemetry must charge the
-            # same work to hvp and hessian buckets (execution + readback,
-            # not host-to-device marshalling).  Pytree buckets were raveled
-            # per request at submit time, so this is still ONE device
-            # transfer per operand per bucket.
-            A = jnp.asarray(pad_rows(np.stack([r.a for r in live]), bucket))
-            V = None if q.workload == "batched_hessian" else jnp.asarray(
-                pad_rows(np.stack([r.v for r in live]), bucket))
-            t0 = time.perf_counter()
-            if q.workload == "batched_diag":
-                # per-row probe budgets: padding rows inherit the last
-                # row's budget (their output is sliced off anyway)
-                P = jnp.asarray(pad_rows(
-                    np.asarray([r.p for r in live], np.int32), bucket))
-                out = xplan.executable(q.workload)(A, V, P)
-            elif q.spec is not None:
-                out = xplan.executable(q.workload)(A, V)
-            elif V is not None:
-                out = xplan.executable(q.workload)(A, V)
-            else:
-                out = xplan.executable(q.workload)(A)
-            out = np.asarray(jax.block_until_ready(out))
-            elapsed = time.perf_counter() - t0
-        except Exception as e:
-            for r in live:
-                r.future.set_exception(e)
-            return
-        # telemetry charges the executable that actually ran -- after a
-        # hot-swap the winner's signature accumulates the fresh history the
-        # drift detector compares against its tuned baseline
-        registry.record_execution(xkey, xbackend, q.workload,
-                                  bucket=bucket, n_points=k,
-                                  elapsed_s=elapsed)
-        with self._lock:
-            self._stats["dispatched"] += k
-            self._stats["batches"] += 1
-            self._stats["padded_rows"] += bucket - k
-            self._stats["buckets"][bucket] += 1
-            q.epoch_counts[bucket] += k
-            q.epoch_points += k
-        for i, r in enumerate(live):
-            # copy: out[i] would be a view pinning the whole padded bucket
-            # (max_batch rows) for as long as the client keeps its result
-            row = out[i].copy()
-            if q.spec is not None:
-                try:
-                    row = q.spec.unravel(row)
-                except Exception as e:      # pragma: no cover - spec bug
-                    r.future.set_exception(e)
-                    continue
-            r.future.set_result(row)
-
-    def _dispatch_loop(self) -> None:
-        while True:
-            self._wake.clear()
-            if self._closed:
-                self.flush()        # drain: no submits can arrive anymore
-                return
-            if self.poll() > 0:
-                continue
-            with self._lock:
-                if self._closed:
-                    continue        # loop back to the drain branch
-                delay = self._next_deadline_delay()
-            # wait for a submit nudge or the oldest request's deadline
-            self._wake.wait(delay)
+    def _execute(self, q, reqs) -> None:
+        self._dispatcher.execute(q, reqs)
 
     def _next_deadline_delay(self) -> Optional[float]:
-        """Seconds until the oldest pending request exceeds its queue's wait
-        budget (None = sleep until nudged).  Caller holds the lock."""
-        deadline = None
-        for q in self._queues.values():
-            if q.requests:
-                wait = (q.max_wait_us if q.max_wait_us is not None
-                        else self.max_wait_us)
-                t = q.requests[0].t_submit + wait * 1e-6
-                deadline = t if deadline is None else min(deadline, t)
-        if deadline is None:
-            return None
-        remaining = deadline - self._clock()
-        return max(remaining, 0.0) + 1e-4   # small slack past the deadline
+        return self._sched.next_deadline_delay()
 
     # -- online tuning ------------------------------------------------------
 
-    def _arrival_rate(self, q: _PlanQueue) -> Optional[float]:
+    def _arrival_rate(self, q) -> Optional[float]:
         """Requests/second over the queue's sliding arrival window (service
         clock); None until two arrivals span measurable time."""
         if len(q.arrivals) < 2:
@@ -600,11 +397,11 @@ class CurvatureService:
             return None
         return (len(q.arrivals) - 1) / span
 
-    def _exec_key_for(self, q: _PlanQueue, bucket: int) -> tuple:
+    def _exec_key_for(self, q, bucket: int) -> tuple:
         ent = q.exec_by_bucket.get(bucket)
         return ent[2] if ent is not None else q.key
 
-    def _examine_queue(self, q: _PlanQueue):
+    def _examine_queue(self, q):
         """Decide what (if anything) to re-tune for one queue.  Caller
         holds the lock.  Returns (mix, need, forced) or None.
 
@@ -616,10 +413,14 @@ class CurvatureService:
         forced : buckets whose stored winner must be re-probed (drift).
         """
         # pytree queues (ravel width is data-dependent, executables are
-        # spec-specialized) and mesh plans (the sharded layout IS the
-        # tuning decision) are served as-is; only flat single-device
-        # queues join the loop
+        # spec-specialized), mesh plans (the sharded layout IS the tuning
+        # decision) and ragged-family queues (mixed-n batches run the
+        # GROUP plan's executable, so per-bucket history no longer
+        # describes the queue's own dense program) are served as-is; only
+        # flat single-device per-n queues join the loop
         if q.spec is not None or q.plan.n is None or q.plan.mesh is not None:
+            return None
+        if q.group is not None:
             return None
         if q.epoch_points < self.retune_min_points:
             return None
@@ -646,7 +447,7 @@ class CurvatureService:
                 forced.add(b)
         return mix, need, forced
 
-    def _run_tuner(self, q: _PlanQueue, need: dict, forced: set) -> dict:
+    def _run_tuner(self, q, need: dict, forced: set) -> dict:
         """One sweep against the observed buckets (no locks held: the tuner
         compiles and times probe executables)."""
         if self._tuner is not None:
@@ -659,11 +460,11 @@ class CurvatureService:
             options=p.options, workload=q.workload,
             deadline_s=self.retune_deadline_s, force=bool(forced))
 
-    def _apply_tuned(self, q: _PlanQueue, tuned: dict) -> int:
+    def _apply_tuned(self, q, tuned: dict) -> int:
         """Install winner executables per bucket.  Caller holds the lock.
 
         The swap is a dict assignment: queued requests are untouched, the
-        next ``_execute`` for that bucket simply resolves to the new
+        next execute for that bucket simply resolves to the new
         (already compiled -- ``apply_bucket_config`` reproduces the probe
         plan's cache key) executable.  Zero dropped requests by design."""
         from .autotune import apply_bucket_config
@@ -682,7 +483,7 @@ class CurvatureService:
             swaps += 1
         return swaps
 
-    def _tune_queue_knobs(self, q: _PlanQueue) -> None:
+    def _tune_queue_knobs(self, q) -> None:
         """Fit the per-queue dispatcher knobs from arrival rate + learned
         us/point (caller holds the lock)."""
         rate = self._arrival_rate(q)
@@ -782,43 +583,55 @@ class CurvatureService:
 
     def stats(self) -> dict:
         """Counters snapshot: submitted/dispatched/batches/padded_rows,
-        the tuning counters (retunes/hot_swaps/retune_errors), a
-        {bucket: batches} histogram and the current queue depth."""
+        the tuning counters (retunes/hot_swaps/retune_errors), the ragged
+        coalescing counters (ragged_batches/ragged_points, cross_n_fills),
+        a {bucket: batches} histogram, the current queue depth, and -- when
+        an AdmissionController is configured -- its shed counters."""
         with self._lock:
             s = dict(self._stats)
             s["buckets"] = dict(self._stats["buckets"])
-            s["pending"] = self._pending
-            return s
+            s["pending"] = self._sched.pending
+        if self.admission is not None:
+            s["admission"] = self.admission.stats()
+        return s
 
     def shutdown(self, wait: bool = True) -> None:
         """Stop accepting submits.  ``wait=True`` drains pending requests
-        (dispatching them) and joins the dispatcher; ``wait=False`` fails
-        pending futures with ServiceClosed."""
-        with self._space:
-            if self._closed and self._thread is None:
+        (dispatching them) and joins every worker; ``wait=False`` fails
+        pending futures with ServiceClosed.
+
+        Deterministic ordering (no daemon-thread races at interpreter
+        exit): close the intake, stop and join the re-tune thread FIRST
+        (no sweep can hot-swap mid-drain), then wake and join the dispatch
+        workers (each drains the queues before exiting), then -- for
+        ``start=False`` services -- drain inline.  Idempotent: a second
+        call returns immediately."""
+        sched = self._sched
+        with sched.space:
+            if sched.closed and self._thread is None:
                 return
-            self._closed = True
+            sched.closed = True
             if not wait:
-                for q in self._queues.values():
-                    while q.requests:
-                        r = q.requests.popleft()
-                        self._pending -= 1
-                        if r.future.set_running_or_notify_cancel():
-                            r.future.set_exception(
-                                ServiceClosed("service shut down"))
-            self._space.notify_all()
-        self._wake.set()
+                sched.fail_pending(ServiceClosed("service shut down"))
+            sched.space.notify_all()
         self._retune_stop.set()
         rt, self._retune_thread = self._retune_thread, None
         if rt is not None:
             rt.join()
-        t, self._thread = self._thread, None
-        if t is not None:
-            if wait:
-                t.join()
+        sched.wake.set()
+        if not wait:
+            # workers exit on their own via the drain branch (queues are
+            # already empty -- pending futures were failed above)
+            self._dispatcher.threads = []
             return
-        if wait:
+        had_workers = bool(self._dispatcher.threads)
+        self._dispatcher.join()
+        if not had_workers:
             self.flush()            # start=False services drain inline
+
+    def close(self) -> None:
+        """Alias for ``shutdown(wait=True)`` (drain and join)."""
+        self.shutdown(wait=True)
 
     def __enter__(self):
         return self
@@ -833,6 +646,18 @@ class CurvatureService:
 
 _DEFAULT: Optional[CurvatureService] = None
 _DEFAULT_LOCK = threading.Lock()
+_ATEXIT_REGISTERED = False
+
+
+def _register_atexit_locked() -> None:
+    """Drain the default service at interpreter exit (caller holds
+    _DEFAULT_LOCK).  Daemon workers die abruptly during finalization;
+    an orderly shutdown first resolves every in-flight future."""
+    global _ATEXIT_REGISTERED
+    if not _ATEXIT_REGISTERED:
+        import atexit
+        atexit.register(shutdown_service)
+        _ATEXIT_REGISTERED = True
 
 
 def get_service() -> CurvatureService:
@@ -841,6 +666,7 @@ def get_service() -> CurvatureService:
     with _DEFAULT_LOCK:
         if _DEFAULT is None:
             _DEFAULT = CurvatureService()
+            _register_atexit_locked()
         return _DEFAULT
 
 
@@ -848,8 +674,10 @@ def configure_service(**kwargs) -> CurvatureService:
     """Replace the process-default service (draining the old one).
 
     Accepts the CurvatureService constructor knobs: ``max_batch``,
-    ``max_wait_us``, ``max_queue``, ``clock``, ``start``, plus the online
-    tuning knobs (``retune_interval_s``, ``drift_factor``, ...; see the
+    ``max_wait_us``, ``max_queue``, ``clock``, ``start``, the serving
+    knobs (``admission``, ``workers``, ``coalesce_across_n``,
+    ``coalesce_waste_max``) plus the online tuning knobs
+    (``retune_interval_s``, ``drift_factor``, ...; see the
     CurvatureService docstring).  The new service
     is installed atomically BEFORE the old one drains, so a concurrent
     ``get_service()`` can never create (and leak) a third one."""
@@ -857,6 +685,7 @@ def configure_service(**kwargs) -> CurvatureService:
     svc = CurvatureService(**kwargs)
     with _DEFAULT_LOCK:
         old, _DEFAULT = _DEFAULT, svc
+        _register_atexit_locked()
     if old is not None:
         old.shutdown(wait=True)
     return svc

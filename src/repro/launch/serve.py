@@ -1,8 +1,20 @@
-"""Serving driver: bring up the batched engine on a reduced config and run a
-synthetic request stream through it.
+"""Curvature server entrypoint: the network-facing HVP/Hessian service.
 
-  python -m repro.launch.serve --arch qwen1.5-4b --reduced \
-      --requests 16 --max-new 24 --max-batch 4
+Brings up the full serving stack (docs/serving.md) -- TCP front-end over
+admission + scheduler + dispatch -- serving the paper test functions by
+name.  The shape-polymorphic functions (rosenbrock, ackley) are served as
+``RaggedFamily`` plans, so mixed-``n`` HVP requests from different clients
+coalesce into shared ragged buckets; fletcher_powell builds one plan per
+requested ``n``.
+
+  # serve until interrupted:
+  python -m repro.launch.serve --port 7311 --high-water 2048
+
+  # end-to-end selftest (ephemeral port, client round-trips, exit code):
+  python -m repro.launch.serve --selftest
+
+The old token-decode driver moved with its engine to
+``repro.models.decode_engine`` (run it via ``examples/serve_lm.py``).
 """
 
 from __future__ import annotations
@@ -10,44 +22,133 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import get_config
-from repro.models.params import init_params
-from repro.serving import ServingEngine
+from repro import engine
+from repro.core import testfns
+from repro.serving.frontend import CurvatureFrontend, connect
+
+
+def build_plans(functions, symmetric: bool = False) -> dict:
+    """Name -> plan factory registry for the front-end."""
+    plans = {}
+    for name in functions:
+        if name in ("rosenbrock", "ackley"):
+            fam = testfns.ragged_family(name)
+            plans[name] = (lambda n, _fam=fam: engine.plan(
+                _fam, n, symmetric=symmetric))
+        elif name == "fletcher_powell":
+            plans[name] = lambda n: engine.plan(
+                testfns.make_fletcher_powell(n), n, symmetric=symmetric)
+        else:
+            raise SystemExit(f"unknown function {name!r}; expected a subset "
+                             f"of {sorted(testfns.FUNCTIONS)}")
+    return plans
+
+
+def build_admission(args) -> engine.AdmissionController | None:
+    if args.high_water is None and args.rate is None:
+        return None
+    return engine.AdmissionController(
+        default_policy=engine.ClientPolicy(rate=args.rate, burst=args.burst),
+        high_water=args.high_water,
+        interactive_headroom=args.interactive_headroom)
+
+
+def selftest(fe: CurvatureFrontend) -> int:
+    """Round-trip mixed-n HVPs from two clients; verify against plan.hvp."""
+    host, port = fe.address
+    rng = np.random.RandomState(0)
+    checks = []
+    with connect(host, port, client="selftest-a") as ca, \
+            connect(host, port, client="selftest-b") as cb:
+        assert ca.ping() == "pong"
+        print(f"plans: {ca.plans()}")
+        futs = []
+        for i, (cli, n) in enumerate([(ca, 8), (cb, 12), (ca, 16),
+                                      (cb, 8), (ca, 12), (cb, 16)]):
+            a = rng.uniform(-2, 2, n).astype(np.float32)
+            v = rng.uniform(-1, 1, n).astype(np.float32)
+            pr = "interactive" if i % 3 == 0 else "batch"
+            futs.append((n, a, v, cli.submit_hvp("rosenbrock", a, v,
+                                                 priority=pr)))
+        for n, a, v, fut in futs:
+            got = np.asarray(fut.result(timeout=60), np.float32)
+            want = np.asarray(engine.plan(
+                testfns.ragged_family("rosenbrock"), n,
+                symmetric=False).hvp(a, v))
+            rel = float(np.max(np.abs(got - want))
+                        / (np.max(np.abs(want)) + 1e-8))
+            checks.append(rel)
+            if rel > 1e-3:
+                print(f"FAIL n={n} relerr={rel:.2e}")
+                return 1
+        stats = ca.stats()
+    print(f"selftest: {len(checks)} round-trips OK "
+          f"(max relerr {max(checks):.2e}); "
+          f"batches={stats['batches']} ragged={stats['ragged_batches']} "
+          f"clients={sorted(engine.client_stats())}")
+    return 0
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--max-seq", type=int, default=256)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
+    ap = argparse.ArgumentParser(
+        description="network-facing curvature (HVP/Hessian) server")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="0 binds an ephemeral port (printed at startup)")
+    ap.add_argument("--functions", default="rosenbrock,ackley",
+                    help="comma list served by name over the wire")
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--max-wait-us", type=float, default=500.0)
+    ap.add_argument("--max-queue", type=int, default=4096)
+    ap.add_argument("--workers", type=int, default=None,
+                    help="dispatch workers (default: one per device)")
+    ap.add_argument("--no-cross-n", action="store_true",
+                    help="disable cross-n ragged coalescing")
+    ap.add_argument("--coalesce-waste-max", type=float, default=0.4)
+    ap.add_argument("--high-water", type=int, default=None,
+                    help="queue depth where batch submits start shedding")
+    ap.add_argument("--interactive-headroom", type=float, default=1.5)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="per-client token-bucket refill (req/s)")
+    ap.add_argument("--burst", type=int, default=32)
+    ap.add_argument("--retune-interval-s", type=float, default=None,
+                    help="enable the online re-tune thread")
+    ap.add_argument("--selftest", action="store_true",
+                    help="serve on an ephemeral port, run client "
+                         "round-trips, exit")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, reduced=args.reduced)
-    params = init_params(cfg, jax.random.PRNGKey(args.seed))
-    eng = ServingEngine(params, cfg, max_batch=args.max_batch,
-                        max_seq=args.max_seq,
-                        temperature=args.temperature, seed=args.seed)
-    rng = np.random.RandomState(args.seed)
-    t0 = time.perf_counter()
-    for i in range(args.requests):
-        plen = int(rng.randint(4, 32))
-        eng.submit(rng.randint(0, cfg.vocab_size, size=plen),
-                   max_new_tokens=args.max_new)
-    done = eng.run()
-    dt = time.perf_counter() - t0
-    total_tokens = sum(len(r.out_tokens) for r in done)
-    print(f"served {len(done)} requests, {total_tokens} tokens "
-          f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s)")
-    for r in done[:3]:
-        print(f"  rid={r.rid} out={r.out_tokens[:8]}...")
+    plans = build_plans([f.strip() for f in args.functions.split(",") if
+                         f.strip()])
+    svc = engine.CurvatureService(
+        max_batch=args.max_batch, max_wait_us=args.max_wait_us,
+        max_queue=args.max_queue, workers=args.workers,
+        admission=build_admission(args),
+        coalesce_across_n=not args.no_cross_n,
+        coalesce_waste_max=args.coalesce_waste_max,
+        retune_interval_s=args.retune_interval_s)
+    fe = CurvatureFrontend(plans, service=svc, host=args.host,
+                           port=args.port)
+    fe.start()
+    host, port = fe.address
+    print(f"curvature server on {host}:{port} "
+          f"(functions: {sorted(plans)}; cross-n "
+          f"{'off' if args.no_cross_n else 'on'})")
+    try:
+        if args.selftest:
+            raise SystemExit(selftest(fe))
+        while True:
+            time.sleep(10.0)
+            s = svc.stats()
+            print(f"  served={s['dispatched']} batches={s['batches']} "
+                  f"ragged={s['ragged_batches']} pending={s['pending']}")
+    except KeyboardInterrupt:
+        print("shutting down")
+    finally:
+        fe.stop()
+        svc.shutdown(wait=True)
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
-"""Batched serving engine: slot-based continuous batching over the decode
-step.
+"""Token-decode engine: slot-based continuous batching over the decode
+step of the LM model zoo (moved from ``repro.serving`` -- that package now
+holds the CURVATURE serving stack; this engine is a model-zoo utility).
 
 A fixed pool of ``max_batch`` slots shares one decode-state pytree (the
 layout the decode_* dry-run cells lower). Requests queue up; free slots are

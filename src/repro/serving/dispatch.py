@@ -1,0 +1,249 @@
+"""Dispatch layer: execute coalesced batches on devices, resolve futures.
+
+The serving stack (docs/serving.md) is transport -> admission ->
+scheduler -> **dispatch**.  This module turns the scheduler's ready
+batches into device work:
+
+  * **worker threads, one per device** -- each worker parks on the
+    scheduler's ``wake`` event / deadline timer, pops ready batches and
+    executes them inside a ``jax.default_device`` context for its pinned
+    device.  On a single-device host this degenerates to exactly the old
+    one-dispatcher-thread service; with k devices, k plan queues drain
+    concurrently.  All workers share the plan executable cache and every
+    queue's hot-swapped ``exec_by_bucket`` winners, so the PR-8 re-tune
+    contract (swaps never drop in-flight work) is unchanged.
+  * **dense buckets** -- single-n batches stack to (k, n), pad to the
+    power-of-two bucket (``pad_rows`` edge replication) and run the
+    queue's ordinary ``batched_hvp`` / ``batched_hessian`` /
+    ``batched_diag`` executable, honoring any re-tuned per-bucket winner.
+  * **ragged buckets** -- a batch holding MORE THAN ONE row width (the
+    scheduler's cross-n fill) pads every row to ``n_pad = max(n)``
+    (``pad_cols``), stacks the effective widths into an ``NE`` vector and
+    runs the RaggedGroup's ``batched_hvp_ragged`` executable; each future
+    resolves to its own first ``n`` entries.  Telemetry for these batches
+    is recorded under the group plan's signature, and they are excluded
+    from the per-queue re-tune epoch (the tuner reasons about the dense
+    executables only).
+  * **telemetry** -- every executed bucket reports measured us/point to
+    ``registry.record_execution``, now with per-client row counts so
+    ``registry.client_stats`` can witness which clients shared a batch.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import registry
+from repro.engine.plan import bucket_size, pad_cols, pad_rows
+
+from .scheduler import PlanQueue, Scheduler
+
+__all__ = ["Dispatcher"]
+
+
+class Dispatcher:
+    """Executes batches popped from a Scheduler and runs the worker pool."""
+
+    def __init__(self, sched: Scheduler, *, workers: Optional[int] = None):
+        """``workers=None`` sizes the pool to the local device count (the
+        single-device default is one worker, the old dispatcher thread).
+        ``workers=0`` is the inline mode (``start=False`` services): no
+        threads, batches execute on whoever calls ``run_once``."""
+        self.sched = sched
+        self.devices = list(jax.local_devices())
+        if workers is None:
+            workers = len(self.devices)
+        if workers < 0:
+            raise ValueError(f"workers={workers} must be >= 0")
+        self.n_workers = int(workers)
+        self.threads: list = []
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> None:
+        for i in range(self.n_workers):
+            dev = self.devices[i % len(self.devices)] if self.devices else None
+            t = threading.Thread(
+                target=self._worker_loop, args=(dev,),
+                name=f"curvature-dispatch-{i}", daemon=True)
+            t.start()
+            self.threads.append(t)
+
+    def join(self) -> None:
+        ts, self.threads = self.threads, []
+        for t in ts:
+            t.join()
+
+    # -- draining -----------------------------------------------------------
+
+    def run_once(self, now=None, force: bool = False) -> int:
+        """Pop-and-execute until no queue is ready; returns requests run."""
+        sched = self.sched
+        if now is None and not force:
+            now = sched.clock()
+        dispatched = 0
+        while True:
+            batch = sched.take_ready_batch(now, force=force)
+            if batch is None:
+                return dispatched
+            q, reqs = batch
+            self.execute(q, reqs)
+            dispatched += len(reqs)
+
+    def _run_pinned(self, dev, force: bool = False) -> int:
+        # jax.default_device returns a single-use context manager; enter a
+        # fresh one per pass so the worker's device pin survives the loop
+        if dev is None:
+            return self.run_once(force=force)
+        with jax.default_device(dev):
+            return self.run_once(force=force)
+
+    def _worker_loop(self, dev) -> None:
+        sched = self.sched
+        while True:
+            sched.wake.clear()
+            if sched.closed:
+                # drain: no submits can arrive anymore.  Every worker
+                # drains (take_ready_batch pops atomically, so batches are
+                # never executed twice) and re-raises the wake so sibling
+                # workers parked in an unbounded wait also exit.
+                self._run_pinned(dev, force=True)
+                sched.wake.set()
+                return
+            if self._run_pinned(dev) > 0:
+                continue
+            with sched.lock:
+                if sched.closed:
+                    continue        # loop back to the drain branch
+                delay = sched.next_deadline_delay()
+            # wait for a submit nudge or the oldest request's deadline
+            sched.wake.wait(delay)
+
+    # -- execution ----------------------------------------------------------
+
+    def execute(self, q: PlanQueue, reqs) -> None:
+        """Run one coalesced bucket and resolve its futures."""
+        live = [r for r in reqs if r.future.set_running_or_notify_cancel()]
+        if not live:
+            return
+        if q.group is not None and len({r.n for r in live}) > 1:
+            self._execute_ragged(q, live)
+            return
+        sched = self.sched
+        k = len(live)
+        bucket = bucket_size(k, sched.max_batch)
+        # per-bucket hot-swap: the re-tune loop installs winner executables
+        # keyed by bucket; requests queued before a swap still execute (on
+        # the new winner) and their futures resolve -- nothing is dropped.
+        with sched.lock:
+            tuned = q.exec_by_bucket.get(bucket)
+        xplan, xbackend, xkey = tuned if tuned is not None \
+            else (q.plan, q.backend, q.key)
+        try:
+            # marshal BOTH operands before t0: telemetry must charge the
+            # same work to hvp and hessian buckets (execution + readback,
+            # not host-to-device marshalling).  Pytree buckets were raveled
+            # per request at submit time, so this is still ONE device
+            # transfer per operand per bucket.
+            A = jnp.asarray(pad_rows(np.stack([r.a for r in live]), bucket))
+            V = None if q.workload == "batched_hessian" else jnp.asarray(
+                pad_rows(np.stack([r.v for r in live]), bucket))
+            t0 = time.perf_counter()
+            if q.workload == "batched_diag":
+                # per-row probe budgets: padding rows inherit the last
+                # row's budget (their output is sliced off anyway)
+                P = jnp.asarray(pad_rows(
+                    np.asarray([r.p for r in live], np.int32), bucket))
+                out = xplan.executable(q.workload)(A, V, P)
+            elif q.spec is not None:
+                out = xplan.executable(q.workload)(A, V)
+            elif V is not None:
+                out = xplan.executable(q.workload)(A, V)
+            else:
+                out = xplan.executable(q.workload)(A)
+            out = np.asarray(jax.block_until_ready(out))
+            elapsed = time.perf_counter() - t0
+        except Exception as e:
+            for r in live:
+                r.future.set_exception(e)
+            return
+        # telemetry charges the executable that actually ran -- after a
+        # hot-swap the winner's signature accumulates the fresh history the
+        # drift detector compares against its tuned baseline
+        registry.record_execution(xkey, xbackend, q.workload,
+                                  bucket=bucket, n_points=k,
+                                  elapsed_s=elapsed,
+                                  clients=self._client_rows(live))
+        with sched.lock:
+            sched.stats["dispatched"] += k
+            sched.stats["batches"] += 1
+            sched.stats["padded_rows"] += bucket - k
+            sched.stats["buckets"][bucket] += 1
+            q.epoch_counts[bucket] += k
+            q.epoch_points += k
+        for i, r in enumerate(live):
+            # copy: out[i] would be a view pinning the whole padded bucket
+            # (max_batch rows) for as long as the client keeps its result
+            row = out[i].copy()
+            if q.spec is not None:
+                try:
+                    row = q.spec.unravel(row)
+                except Exception as e:      # pragma: no cover - spec bug
+                    r.future.set_exception(e)
+                    continue
+            r.future.set_result(row)
+
+    def _execute_ragged(self, q: PlanQueue, live) -> None:
+        """Run one mixed-n bucket through the family's ragged executable."""
+        sched = self.sched
+        k = len(live)
+        bucket = bucket_size(k, sched.max_batch)
+        n_pad = max(r.n for r in live)
+        with sched.lock:
+            gplan, gbackend, gkey = q.group.plan_for(n_pad)
+        try:
+            A = jnp.asarray(pad_rows(np.stack(
+                [pad_cols(np.asarray(r.a), n_pad) for r in live]), bucket))
+            V = jnp.asarray(pad_rows(np.stack(
+                [pad_cols(np.asarray(r.v), n_pad) for r in live]), bucket))
+            NE = jnp.asarray(pad_rows(
+                np.asarray([r.n for r in live], np.int32), bucket))
+            t0 = time.perf_counter()
+            out = gplan.executable("batched_hvp_ragged")(A, V, NE)
+            out = np.asarray(jax.block_until_ready(out))
+            elapsed = time.perf_counter() - t0
+        except Exception as e:
+            for r in live:
+                r.future.set_exception(e)
+            return
+        registry.record_execution(gkey, gbackend, "batched_hvp_ragged",
+                                  bucket=bucket, n_points=k,
+                                  elapsed_s=elapsed,
+                                  clients=self._client_rows(live))
+        with sched.lock:
+            sched.stats["dispatched"] += k
+            sched.stats["batches"] += 1
+            sched.stats["padded_rows"] += bucket - k
+            sched.stats["buckets"][bucket] += 1
+            sched.stats["ragged_batches"] += 1
+            sched.stats["ragged_points"] += k
+            # NOT counted into q.epoch_counts: the re-tune loop reasons
+            # about the queue's dense executables, and ragged batches run
+            # the group plan instead
+        for i, r in enumerate(live):
+            r.future.set_result(out[i, :r.n].copy())
+
+    @staticmethod
+    def _client_rows(live) -> Optional[dict]:
+        """{client: row count} for telemetry, or None if all anonymous."""
+        counts: dict = {}
+        for r in live:
+            if r.client is not None:
+                counts[r.client] = counts.get(r.client, 0) + 1
+        return counts or None

@@ -1,57 +1,447 @@
-"""Serving engine: continuous batching must produce exactly the tokens a
-naive one-request-at-a-time greedy decode produces."""
+"""Layered serving stack acceptance: masked ragged families must agree
+with their dense functions, cross-n coalescing must merge mixed widths
+(and honor the padding-waste gate), admission must shed typed and
+counted, the fair scheduler must drain interactive first and starve no
+one, the TCP front-end must round-trip results AND typed errors, and
+``close()`` must be deterministic, idempotent and drain in-flight work.
+"""
 
-import jax
+import socket
+import threading
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config
-from repro.models.model import (decode_step, init_decode_state, make_batch,
-                                prefill)
-from repro.models.params import init_params
-from repro.serving import ServingEngine
+from repro import engine
+from repro.core import testfns
+from repro.engine.service import CurvatureService
+from repro.serving import (AdmissionController, ClientPolicy, Scheduler,
+                           ServiceClosed, ServiceOverloaded, TokenBucket)
+from repro.serving import protocol
+
+NS = (8, 12, 16)
 
 
-def naive_greedy(params, cfg, prompt, max_new, max_seq=64):
-    state = init_decode_state(cfg, 1, max_seq)
-    toks = jnp.asarray(prompt[None, :], jnp.int32)
-    lg, state = prefill(params, cfg, {"tokens": toks}, state)
-    out = [int(jnp.argmax(lg[0]))]
-    pos = len(prompt)
-    while len(out) < max_new:
-        lg, state = decode_step(params, cfg,
-                                jnp.asarray([[out[-1]]], jnp.int32),
-                                jnp.asarray([pos], jnp.int32), state)
-        out.append(int(jnp.argmax(lg[0])))
-        pos += 1
-    return out
+def _xv(n, seed=0):
+    rng = np.random.RandomState(seed)
+    return (np.asarray(rng.uniform(-2, 2, n), np.float32),
+            np.asarray(rng.randn(n), np.float32))
 
 
-@pytest.mark.parametrize("arch", ["qwen1.5-4b", "mamba2-2.7b"])
-def test_engine_matches_naive_decode(arch):
-    cfg = get_config(arch, reduced=True)
-    params = init_params(cfg, jax.random.PRNGKey(0))
+def _fam_plans(name="rosenbrock", ns=NS):
+    fam = testfns.ragged_family(name)
+    return fam, {n: engine.plan(fam, n, symmetric=False) for n in ns}
+
+
+# ---------------------------------------------------------------------------
+# masked families: the algebra the ragged path rests on
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["rosenbrock", "ackley"])
+def test_masked_family_matches_dense_on_prefix(name):
+    """masked(x_pad, n_eff) == f(x_pad[:n_eff]) -- values AND curvature."""
+    fam = testfns.ragged_family(name)
+    n_pad, n_eff = 12, 7
+    x, v = _xv(n_pad, seed=3)
+    np.testing.assert_allclose(fam.masked(jnp.asarray(x), n_eff),
+                               fam.fn(jnp.asarray(x[:n_eff])),
+                               rtol=1e-6, atol=1e-6)
+    # the ragged executable's HVP row == the dense plan's HVP at n_eff
+    gplan = engine.plan(fam, n_pad, symmetric=False)
+    out = gplan.executable("batched_hvp_ragged")(
+        jnp.asarray(x)[None], jnp.asarray(v)[None],
+        jnp.asarray([n_eff], jnp.int32))
+    dense = engine.plan(fam, n_eff, symmetric=False).hvp(x[:n_eff],
+                                                         v[:n_eff])
+    np.testing.assert_allclose(np.asarray(out[0, :n_eff]),
+                               np.asarray(dense), rtol=1e-4, atol=1e-4)
+    # masking is multiplicative-exact: curvature outside the prefix is 0
+    np.testing.assert_allclose(np.asarray(out[0, n_eff:]), 0.0, atol=1e-6)
+
+
+def test_ragged_family_unknown_name_rejected():
+    with pytest.raises(ValueError, match="fletcher_powell|ragged"):
+        testfns.ragged_family("fletcher_powell")
+
+
+# ---------------------------------------------------------------------------
+# cross-n coalescing: the tentpole witness
+# ---------------------------------------------------------------------------
+
+def test_mixed_n_clients_share_one_ragged_bucket():
+    """Two clients, three widths, one flush -> ONE ragged batch whose
+    results match each width's own dense plan, witnessed in telemetry."""
+    engine.clear_telemetry()
+    fam, plans = _fam_plans()
+    svc = CurvatureService(max_batch=16, max_wait_us=100.0, start=False)
+    reqs = []
+    for i, n in enumerate(list(NS) * 2):
+        a, v = _xv(n, seed=i)
+        cid = f"cli-{i % 2}"
+        reqs.append((n, a, v, svc.submit(plans[n], a, v, client=cid)))
+    svc.flush()
+    for n, a, v, fut in reqs:
+        np.testing.assert_allclose(fut.result(timeout=30),
+                                   np.asarray(plans[n].hvp(a, v)),
+                                   rtol=1e-4, atol=1e-4)
+    s = svc.stats()
+    assert s["batches"] == 1 and s["ragged_batches"] == 1
+    assert s["ragged_points"] == len(reqs)
+    assert s["cross_n_fills"] >= len(NS) - 1
+    cs = engine.client_stats()
+    assert cs["cli-0"]["points"] == 3 and cs["cli-1"]["points"] == 3
+    svc.shutdown()
+
+
+def test_waste_gate_refuses_expensive_merges():
+    """With a tight coalesce_waste_max the widths stay per-n: padding an
+    n=8 row to n=16 wastes 0.25 > the 0.1 gate."""
+    fam, plans = _fam_plans()
+    svc = CurvatureService(max_batch=16, max_wait_us=100.0, start=False,
+                           coalesce_waste_max=0.1)
+    futs = []
+    for n in NS:
+        a, v = _xv(n)
+        futs.append(svc.submit(plans[n], a, v))
+    svc.flush()
+    for fut in futs:
+        fut.result(timeout=30)
+    s = svc.stats()
+    assert s["batches"] == len(NS) and s["ragged_batches"] == 0
+    svc.shutdown()
+
+
+def test_coalesce_across_n_off_dispatches_per_n():
+    fam, plans = _fam_plans()
+    svc = CurvatureService(max_batch=16, max_wait_us=100.0, start=False,
+                           coalesce_across_n=False)
+    futs = []
+    for n in NS:
+        a, v = _xv(n)
+        futs.append(svc.submit(plans[n], a, v))
+    svc.flush()
+    for fut in futs:
+        fut.result(timeout=30)
+    s = svc.stats()
+    assert s["batches"] == len(NS) and s["ragged_batches"] == 0
+    svc.shutdown()
+
+
+def test_full_dense_bucket_is_never_diluted():
+    """A width holding a FULL bucket dispatches dense; only the partial
+    leftovers merge."""
+    fam, plans = _fam_plans()
+    svc = CurvatureService(max_batch=2, max_wait_us=100.0, start=False)
+    futs = []
+    for i in range(2):                      # full bucket of n=8
+        a, v = _xv(8, seed=i)
+        futs.append(svc.submit(plans[8], a, v))
+    a, v = _xv(16, seed=9)
+    futs.append(svc.submit(plans[16], a, v))
+    svc.flush()
+    for fut in futs:
+        fut.result(timeout=30)
+    s = svc.stats()
+    assert s["ragged_batches"] == 0         # full n=8 bucket stayed dense
+    assert s["batches"] == 2
+    svc.shutdown()
+
+
+def test_ragged_member_queues_exempt_from_retune():
+    """The re-tune loop reasons about dense executables; RaggedFamily
+    member queues are skipped (their mixed batches run the group plan)."""
+    fam, plans = _fam_plans()
+    calls = []
+
+    def tuner(plan, workload, buckets, force, deadline_s):
+        calls.append(dict(buckets))
+        return {}
+
+    svc = CurvatureService(max_batch=8, max_wait_us=100.0, start=False,
+                           tuner=tuner, retune_min_points=1,
+                           tune_dispatch=False)
+    for n in NS:
+        a, v = _xv(n)
+        svc.submit(plans[n], a, v)
+    svc.flush()
+    rep = svc.retune()
+    assert rep["queues_tuned"] == 0 and calls == []
+    svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# admission: token buckets, shedding, headroom
+# ---------------------------------------------------------------------------
+
+def test_token_bucket_refill_and_retry_after():
+    tb = TokenBucket(rate=10.0, burst=2)
+    assert tb.try_take(0.0) and tb.try_take(0.0)
+    assert not tb.try_take(0.0)
+    assert tb.retry_after() == pytest.approx(0.1)
+    assert tb.try_take(0.1)                  # one token refilled
+
+
+def test_rate_limited_client_sheds_with_retry_hint():
+    now = [0.0]
+    adm = AdmissionController(
+        default_policy=ClientPolicy(rate=1.0, burst=2),
+        clock=lambda: now[0])
+    p = engine.plan(testfns.rosenbrock, 8, csize=2, symmetric=False)
+    a, v = _xv(8)
+    svc = CurvatureService(max_batch=8, max_wait_us=100.0, start=False,
+                           admission=adm)
+    futs = [svc.submit(p, a, v, client="chatty") for _ in range(2)]
+    with pytest.raises(ServiceOverloaded) as ei:
+        svc.submit(p, a, v, client="chatty")
+    assert ei.value.retry_after_s > 0
+    assert adm.stats()["shed_rate"] == 1
+    # an unrelated client still gets in: buckets are per-identity
+    futs.append(svc.submit(p, a, v, client="quiet"))
+    svc.flush()
+    for f in futs:
+        f.result(timeout=30)
+    assert svc.stats()["admission"]["shed_rate"] == 1
+    svc.shutdown()
+
+
+def test_high_water_sheds_batch_before_interactive():
+    p = engine.plan(testfns.rosenbrock, 8, csize=2, symmetric=False)
+    a, v = _xv(8)
+    adm = AdmissionController(high_water=4, interactive_headroom=1.5)
+    svc = CurvatureService(max_batch=64, max_wait_us=1e6, start=False,
+                           admission=adm)
+    futs = [svc.submit(p, a, v) for _ in range(4)]      # depth -> 4
+    with pytest.raises(ServiceOverloaded):              # batch sheds at 4
+        svc.submit(p, a, v)
+    # interactive headroom: 4 * 1.5 = 6, so two more land...
+    futs += [svc.submit(p, a, v, priority="interactive")
+             for _ in range(2)]
+    with pytest.raises(ServiceOverloaded):              # ...but not a third
+        svc.submit(p, a, v, priority="interactive")
+    assert adm.stats()["shed_depth"] == 2
+    svc.flush()
+    for f in futs:
+        f.result(timeout=30)
+    svc.shutdown()
+
+
+def test_unknown_priority_rejected_at_submit():
+    p = engine.plan(testfns.rosenbrock, 8, csize=2, symmetric=False)
+    a, v = _xv(8)
+    with CurvatureService(start=False) as svc:
+        with pytest.raises(ValueError, match="priority"):
+            svc.submit(p, a, v, priority="urgent")
+
+
+# ---------------------------------------------------------------------------
+# scheduler: strict priority + weighted fairness (layer-level, no threads)
+# ---------------------------------------------------------------------------
+
+def _bare_scheduler(**kw):
+    import collections
+    stats = collections.Counter()
+    stats["buckets"] = collections.Counter()
+    return Scheduler(max_batch=kw.pop("max_batch", 8),
+                     max_wait_us=kw.pop("max_wait_us", 100.0),
+                     max_queue=kw.pop("max_queue", 4096),
+                     clock=kw.pop("clock", lambda: 0.0),
+                     stats=stats, **kw)
+
+
+def test_interactive_drains_strictly_before_batch():
+    sched = _bare_scheduler(max_batch=4)
+    p = engine.plan(testfns.rosenbrock, 8, csize=2, symmetric=False)
+    a, v = _xv(8)
+    tags = []
+    for pr in ["batch"] * 4 + ["interactive"] * 3:
+        fut = sched.submit(p, a, v, client="c", priority=pr)
+        tags.append((pr, fut))
+    q, reqs = sched.take_ready_batch(0.0, force=True)
+    assert [r.priority for r in reqs] == \
+        ["interactive"] * 3 + ["batch"]
+    # the deferred batch requests are still queued, nothing lost
+    assert len(q.requests) == 3 and sched.pending == 3
+
+
+def test_weighted_fair_dequeue_prevents_starvation():
+    adm = AdmissionController(policies={"fast": ClientPolicy(weight=2.0)})
+    sched = _bare_scheduler(max_batch=6, admission=adm)
+    p = engine.plan(testfns.rosenbrock, 8, csize=2, symmetric=False)
+    a, v = _xv(8)
+    for _ in range(6):
+        sched.submit(p, a, v, client="fast")
+    for _ in range(6):
+        sched.submit(p, a, v, client="slow")
+    q, reqs = sched.take_ready_batch(0.0, force=True)
+    counts = {c: sum(1 for r in reqs if r.client == c)
+              for c in ("fast", "slow")}
+    # weight 2 gets 2x the dequeues; the weight-1 client is NOT starved
+    assert counts == {"fast": 4, "slow": 2}
+
+
+def test_greedy_client_cannot_starve_a_late_arrival():
+    sched = _bare_scheduler(max_batch=4)
+    p = engine.plan(testfns.rosenbrock, 8, csize=2, symmetric=False)
+    a, v = _xv(8)
+    for _ in range(12):
+        sched.submit(p, a, v, client="greedy")
+    sched.submit(p, a, v, client="late")     # joins at the vt floor
+    q, reqs = sched.take_ready_batch(0.0, force=True)
+    assert any(r.client == "late" for r in reqs)
+
+
+def test_untagged_traffic_takes_fifo_fast_path():
+    sched = _bare_scheduler(max_batch=8)
+    p = engine.plan(testfns.rosenbrock, 8, csize=2, symmetric=False)
+    marks = []
+    for i in range(5):
+        a, v = _xv(8, seed=i)
+        fut = sched.submit(p, a, v)
+        marks.append((i, fut))
+    q, reqs = sched.take_ready_batch(0.0, force=True)
+    assert q.tagged == 0
+    assert [id(r.future) for r in reqs] == \
+        [id(f) for _, f in marks]            # strict submit order
+
+
+# ---------------------------------------------------------------------------
+# transport: wire protocol + socket front-end
+# ---------------------------------------------------------------------------
+
+def test_protocol_roundtrip_and_error_codes():
+    line = protocol.encode({"id": 1, "method": "hvp", "plan": "f"})
+    assert protocol.decode(line) == {"id": 1, "method": "hvp", "plan": "f"}
+    with pytest.raises(ValueError):
+        protocol.decode(b"not json\n")
+    err = protocol.error_frame(3, ServiceOverloaded("slow down", 0.25))
+    assert err["error"]["code"] == "overloaded"
+    exc = protocol.exception_for(err["error"]["code"],
+                                 err["error"]["message"],
+                                 err["error"].get("retry_after_s", 0.0))
+    assert isinstance(exc, ServiceOverloaded)
+    assert exc.retry_after_s == pytest.approx(0.25)
+    assert isinstance(protocol.exception_for("closed", "x", 0.0),
+                      ServiceClosed)
+
+
+def test_frontend_roundtrips_results_and_typed_errors():
+    from repro.serving.frontend import CurvatureFrontend, connect
+    fam = testfns.ragged_family("rosenbrock")
+    plans = {"rosenbrock": lambda n: engine.plan(fam, n, symmetric=False)}
+    with CurvatureFrontend(plans, max_batch=8, max_wait_us=200.0) as fe:
+        host, port = fe.address
+        with connect(host, port, client="t") as cli:
+            assert cli.ping() == "pong"
+            assert "rosenbrock" in cli.plans()
+            a, v = _xv(8, seed=5)
+            got = np.asarray(cli.hvp("rosenbrock", a, v), np.float32)
+            want = engine.plan(fam, 8, symmetric=False).hvp(a, v)
+            np.testing.assert_allclose(got, np.asarray(want),
+                                       rtol=1e-4, atol=1e-4)
+            H = np.asarray(cli.hessian("rosenbrock", a), np.float32)
+            wantH = engine.plan(fam, 8, symmetric=False).hessian(a)
+            np.testing.assert_allclose(H, np.asarray(wantH),
+                                       rtol=1e-4, atol=1e-4)
+            with pytest.raises(ValueError):          # unknown plan name
+                cli.hvp("nope", a, v)
+            assert cli.stats()["batches"] >= 1
+
+
+def test_frontend_maps_admission_rejections_onto_the_wire():
+    from repro.serving.frontend import CurvatureFrontend, connect
+    fam = testfns.ragged_family("rosenbrock")
+    plans = {"rosenbrock": lambda n: engine.plan(fam, n, symmetric=False)}
+    adm = AdmissionController(
+        default_policy=ClientPolicy(rate=0.001, burst=1))
+    with CurvatureFrontend(plans, max_batch=8, max_wait_us=200.0,
+                           admission=adm) as fe:
+        host, port = fe.address
+        with connect(host, port, client="limited") as cli:
+            a, v = _xv(8)
+            cli.hvp("rosenbrock", a, v)              # burst token
+            with pytest.raises(ServiceOverloaded) as ei:
+                cli.hvp("rosenbrock", a, v)
+            assert ei.value.retry_after_s > 0
+
+
+def test_frontend_stop_is_idempotent_and_frees_the_port():
+    from repro.serving.frontend import CurvatureFrontend
+    fam = testfns.ragged_family("rosenbrock")
+    plans = {"rosenbrock": lambda n: engine.plan(fam, n, symmetric=False)}
+    fe = CurvatureFrontend(plans)
+    fe.start()
+    host, port = fe.address
+    fe.stop()
+    fe.stop()                                # idempotent
+    s = socket.socket()
+    s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    s.bind((host, port))                     # the port is actually free
+    s.close()
+
+
+# ---------------------------------------------------------------------------
+# close(): deterministic, idempotent, drains in-flight work (satellite f)
+# ---------------------------------------------------------------------------
+
+def test_close_drains_in_flight_futures_and_is_idempotent():
+    p = engine.plan(testfns.rosenbrock, 8, csize=2, symmetric=False)
     rng = np.random.RandomState(0)
-    prompts = [rng.randint(0, cfg.vocab_size, size=int(rng.randint(3, 10)))
-               for _ in range(5)]
+    svc = CurvatureService(max_batch=64, max_wait_us=1e6)   # never flushes
+    futs = []
+    for i in range(9):
+        a = np.asarray(rng.uniform(-2, 2, 8), np.float32)
+        v = np.asarray(rng.randn(8), np.float32)
+        futs.append((a, v, svc.submit(p, a, v)))
+    svc.close()                              # must drain, not drop
+    for a, v, fut in futs:
+        assert fut.done()
+        np.testing.assert_allclose(fut.result(timeout=0),
+                                   np.asarray(p.hvp(a, v)),
+                                   rtol=1e-4, atol=1e-4)
+    svc.close()                              # second close: no-op
+    with pytest.raises(ServiceClosed):
+        svc.submit(p, np.zeros(8, np.float32), np.zeros(8, np.float32))
 
-    eng = ServingEngine(params, cfg, max_batch=2, max_seq=64)
-    reqs = [eng.submit(p, max_new_tokens=6) for p in prompts]
-    done = eng.run()
-    assert len(done) == len(prompts)
 
-    for req, prompt in zip(reqs, prompts):
-        want = naive_greedy(params, cfg, np.asarray(prompt, np.int32), 6)
-        assert req.out_tokens == want, (req.rid, req.out_tokens, want)
+def test_close_joins_the_retune_thread():
+    p = engine.plan(testfns.rosenbrock, 8, csize=2, symmetric=False)
+    a, v = _xv(8)
+    svc = CurvatureService(max_batch=8, max_wait_us=100.0,
+                           retune_interval_s=0.01,
+                           tuner=lambda *args, **kw: {},
+                           retune_min_points=1)
+    fut = svc.submit(p, a, v)
+    fut.result(timeout=30)
+    t = svc._retune_thread
+    assert t is not None and t.is_alive()
+    svc.close()
+    assert not t.is_alive()
+    svc.close()
 
 
-def test_eos_frees_slot_early():
-    cfg = get_config("qwen1.5-4b", reduced=True)
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServingEngine(params, cfg, max_batch=1, max_seq=64)
-    p = np.arange(5, dtype=np.int32)
-    first = naive_greedy(params, cfg, p, 1)[0]
-    r = eng.submit(p, max_new_tokens=50, eos_id=first)
-    done = eng.run()
-    assert done[0].done and len(done[0].out_tokens) == 1
+def test_concurrent_close_and_submits_race_cleanly():
+    """Submitters racing a close either get a result or ServiceClosed --
+    never a hang, never a dropped future."""
+    p = engine.plan(testfns.rosenbrock, 8, csize=2, symmetric=False)
+    a, v = _xv(8)
+    svc = CurvatureService(max_batch=8, max_wait_us=50.0)
+    outcomes = []
+
+    def spam():
+        for _ in range(50):
+            try:
+                fut = svc.submit(p, a, v)
+                outcomes.append(fut.result(timeout=30))
+            except ServiceClosed:
+                outcomes.append("closed")
+
+    ts = [threading.Thread(target=spam) for _ in range(3)]
+    for t in ts:
+        t.start()
+    svc.close()
+    for t in ts:
+        t.join()
+    assert len(outcomes) == 150
+    assert all(isinstance(o, np.ndarray) or o == "closed"
+               for o in outcomes)
