@@ -1,0 +1,229 @@
+"""Observability overhead benchmark: the PR 10 acceptance numbers.
+
+The obs subsystem's hot-path contract (docs/observability.md) is that
+tracing + metrics cost <= 5% of serving throughput when ENABLED and are
+off-by-one-branch when DISABLED.  This suite measures both on the PR 9
+mixed-n closed-loop load (the most integration-dense path: admission-free
+submit, cross-n coalescing, inline dispatch):
+
+  enabled overhead : PAIRED windows -- one service, each round runs the
+                     identical 6-client window twice, obs OFF then ON,
+                     accumulating separate wall-clock totals.  Thermal /
+                     JIT / collector drift lands on both sides instead of
+                     biasing whichever mode was measured second (separate
+                     runs on a noisy host showed +-10% run-to-run swings,
+                     an order of magnitude above the signal).  The gate
+                     takes the MEDIAN overhead across reps so one
+                     GC-unlucky rep cannot fail CI.
+                     Gate: ``enabled_overhead_pct <= 5``.
+  disabled guard   : the disabled path is ONE ``obs.enabled()`` check per
+                     integration point; we time the guard directly (ns)
+                     and scale by the guard count per request, which upper
+                     bounds the disabled-mode tax without trying to
+                     resolve a sub-1% delta from wall-clock noise.
+                     Gate: ``disabled_overhead_pct <= 1``.
+
+The enabled run must also WITNESS that observability was live (traces
+recorded, span histograms fed, counters matching the dispatch count) --
+otherwise a broken integration would "pass" the overhead gate by doing
+nothing.
+
+Writes the ``obs`` section of ``BENCH_pr10.json`` (repo root or
+$BENCH_OBS_OUT) via ``update_bench_json``.
+"""
+
+from __future__ import annotations
+
+import gc
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, update_bench_json
+from benchmarks.frontend_bench import CLIENTS_PER_N, MAX_BATCH, WAIT_US, _warm
+from repro import engine, obs
+from repro.core import testfns
+
+FUNC = "rosenbrock"
+NS = (8, 12, 16)
+ROUNDS = 48
+REPS = 3
+
+ENABLED_OVERHEAD_MAX_PCT = 5.0
+DISABLED_OVERHEAD_MAX_PCT = 1.0
+
+# disabled-path guard touches per request, counted from the integration:
+# submit (trace_begin gate + metrics gate) + dispatch (batch metrics gate
+# + per-request trace check) + record_execution gate + cross-n/shed gates.
+# Deliberately generous -- the bound should survive new touch points.
+GUARDS_PER_REQUEST = 12
+
+
+def _paired_loop(fam, ns, rounds):
+    """The frontend_bench closed loop with client-tagged mixed-n traffic,
+    each round run TWICE back to back -- obs off, then obs on -- inside
+    one service, accumulating separate wall-clock totals.  Returns
+    ``(t_off, t_on, requests_per_mode)``."""
+    client_ns = list(ns) * CLIENTS_PER_N
+    total = rounds * len(client_ns)
+    plans = {n: engine.plan(fam, n, symmetric=False) for n in ns}
+    rng = np.random.RandomState(7)
+    data = {n: (np.asarray(rng.uniform(-2, 2, (rounds, n)), np.float32),
+                np.asarray(rng.randn(rounds, n), np.float32))
+            for n in ns}
+    t_off = t_on = 0.0
+    with engine.CurvatureService(max_batch=MAX_BATCH,
+                                 max_wait_us=WAIT_US, start=False,
+                                 coalesce_across_n=True) as svc:
+
+        def window(i):
+            futs = [svc.submit(plans[n], data[n][0][i], data[n][1][i],
+                               client=f"c{c}")
+                    for c, n in enumerate(client_ns)]
+            svc.flush()
+            for fut in futs:
+                fut.result(timeout=60)
+
+        # absorb residual compiles in both modes, then start from a
+        # settled collector state: a pending gen-2 collection (jax's
+        # object graph makes one cost ~100ms) landing inside ONE mode's
+        # windows would swamp the few-us-per-request delta this bench
+        # exists to resolve
+        obs.disable()
+        window(0)
+        obs.enable()
+        window(0)
+        gc.collect()
+        for i in range(rounds):
+            obs.disable()
+            t0 = time.perf_counter()
+            window(i)
+            t_off += time.perf_counter() - t0
+            obs.enable()
+            t0 = time.perf_counter()
+            window(i)
+            t_on += time.perf_counter() - t0
+    return t_off, t_on, total
+
+
+def _guard_ns(iters: int = 200_000) -> float:
+    """Nanoseconds per disabled-path guard: ``obs.enabled()`` returning
+    False plus the ``trace_begin`` early-out -- the exact code every
+    integration point runs when observability is off."""
+    assert not obs.enabled()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        if obs.enabled():
+            obs.trace_begin()
+    base = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        obs.trace_begin()           # internal disabled check path
+    with_call = time.perf_counter() - t0
+    return max(base, with_call) / iters * 1e9
+
+
+def run(ns=NS, rounds=ROUNDS, reps=REPS, out_path=None):
+    fam = testfns.ragged_family(FUNC)
+    n_clients = CLIENTS_PER_N * len(ns)
+    _warm(fam, ns, n_clients)
+    was_enabled = obs.enabled()
+    try:
+        # each rep is one fully paired off/on sweep; the gate takes the
+        # median across reps so a single GC-unlucky rep can't fail CI
+        overheads = []
+        best_off = best_on = 0.0
+        total = 0
+        for _ in range(reps):
+            obs.enable()
+            obs.reset()
+            t_off, t_on, total = _paired_loop(fam, ns, rounds)
+            overheads.append((t_on / t_off - 1.0) * 100.0)
+            best_off = max(best_off, total / t_off)
+            best_on = max(best_on, total / t_on)
+
+        # witness the enabled halves were actually observing (obs is
+        # still enabled here -- collectors gate on it)
+        reg = obs.metrics_registry()
+        traced = reg.total("repro_traces_total")
+        points = reg.total("repro_points_total")
+        span_metric = reg.get("repro_span_duration_us")
+        spans_seen = sorted(lv[0] for lv, _c in span_metric.series()) \
+            if span_metric is not None else []
+
+        obs.disable()
+        obs.reset()
+        guard_ns = _guard_ns(20_000 if rounds <= 24 else 200_000)
+    finally:
+        obs.set_enabled(was_enabled)
+
+    enabled_pct = float(np.median(overheads))
+    per_req_us = 1e6 / best_off
+    disabled_pct = GUARDS_PER_REQUEST * guard_ns * 1e-3 / per_req_us * 100.0
+
+    emit("obs/enabled_overhead_pct", f"{enabled_pct:.2f}",
+         f"median of {[f'{o:.2f}' for o in overheads]} across paired "
+         f"reps; obs-on {best_on:,.0f} vs obs-off {best_off:,.0f} req/s "
+         f"({n_clients} clients, mixed n in {list(ns)}, gate "
+         f"<= {ENABLED_OVERHEAD_MAX_PCT:g}%)")
+    emit("obs/disabled_overhead_pct", f"{disabled_pct:.4f}",
+         f"{guard_ns:.0f} ns/guard x {GUARDS_PER_REQUEST} guards vs "
+         f"{per_req_us:.0f} us/request (gate "
+         f"<= {DISABLED_OVERHEAD_MAX_PCT:g}%)")
+    emit("obs/traces_recorded", int(traced),
+         f"spans seen: {spans_seen}; {int(points)} points counted")
+
+    payload = {
+        "function": FUNC, "ns": list(ns), "clients": n_clients,
+        "rounds_per_client": rounds, "reps": reps,
+        "max_batch": MAX_BATCH, "max_wait_us": WAIT_US,
+        "rps_obs_off": round(best_off, 1),
+        "rps_obs_on": round(best_on, 1),
+        "enabled_overhead_pct": round(float(enabled_pct), 3),
+        "enabled_overhead_pct_reps": [round(float(o), 3) for o in overheads],
+        "guard_ns": round(float(guard_ns), 1),
+        "guards_per_request": GUARDS_PER_REQUEST,
+        "us_per_request": round(float(per_req_us), 2),
+        "disabled_overhead_pct": round(float(disabled_pct), 5),
+        "traces_recorded": int(traced),
+        "points_counted": int(points),
+        "spans_seen": spans_seen,
+        "gates": {"enabled_max_pct": ENABLED_OVERHEAD_MAX_PCT,
+                  "disabled_max_pct": DISABLED_OVERHEAD_MAX_PCT},
+    }
+    path = update_bench_json(out_path or "BENCH_pr10.json", "obs",
+                             payload, env_var="BENCH_OBS_OUT")
+    emit("obs/bench_json", path, "")
+
+    # paper-claim assertions (run.py convention: raise on violation).
+    # Overhead gates are skipped under an active jax profiler session:
+    # TraceAnnotations wrap only the obs-enabled windows, so the paired
+    # comparison measures profiling cost, not obs cost.
+    if obs.is_active():
+        emit("obs/enabled_gate", "SKIPPED",
+             "profiler session active; annotations bias the on-side")
+        return payload
+    assert traced >= rounds * n_clients, (
+        f"enabled mode recorded only {traced:.0f} traces for "
+        f"{rounds * n_clients} requests -- observability inert, the "
+        f"overhead comparison is meaningless")
+    assert {"enqueue", "device_execute", "respond"} <= set(spans_seen), (
+        f"span histograms missing core spans: {spans_seen}")
+    assert enabled_pct <= ENABLED_OVERHEAD_MAX_PCT, (
+        f"obs-enabled serving is {enabled_pct:.2f}% slower than disabled "
+        f"(acceptance ceiling {ENABLED_OVERHEAD_MAX_PCT:g}%)")
+    assert disabled_pct <= DISABLED_OVERHEAD_MAX_PCT, (
+        f"disabled-path guards cost {disabled_pct:.4f}% of a request "
+        f"(acceptance ceiling {DISABLED_OVERHEAD_MAX_PCT:g}%)")
+    return payload
+
+
+def main(quick: bool = False):
+    if quick:
+        run(rounds=24, reps=2)
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

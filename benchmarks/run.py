@@ -26,6 +26,7 @@ SUITES = {
     "distributed": "benchmarks.distributed_bench",  # L1 rows vs mesh shape
     "zoo": "benchmarks.zoo_bench",          # pytree workloads on zoo configs
     "frontend": "benchmarks.frontend_bench",  # serving stack: cross-n + TCP
+    "obs": "benchmarks.obs_bench",          # observability overhead gates
 }
 
 
@@ -34,15 +35,26 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
+    ap.add_argument("--profile", metavar="DIR", default=None,
+                    help="capture a jax profiler session of the whole run "
+                         "into DIR (view with TensorBoard or Perfetto); "
+                         "device executions are annotated per bucket")
     args = ap.parse_args()
     names = list(SUITES) if not args.only else args.only.split(",")
+
+    from contextlib import nullcontext
+
+    from repro import obs
+    session = (obs.profile_session(args.profile) if args.profile
+               else nullcontext())
     print("name,value,derived")
-    for name in names:
-        mod = __import__(SUITES[name], fromlist=["main"])
-        t0 = time.time()
-        mod.main(quick=args.quick)
-        print(f"# suite {name} done in {time.time() - t0:.1f}s",
-              file=sys.stderr)
+    with session:
+        for name in names:
+            mod = __import__(SUITES[name], fromlist=["main"])
+            t0 = time.time()
+            mod.main(quick=args.quick)
+            print(f"# suite {name} done in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -42,6 +42,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
+from repro import obs
+
 __all__ = [
     "BackendSpec", "register_backend", "get_backend", "list_backends",
     "resolve_backend", "WORKLOADS",
@@ -204,6 +206,77 @@ def clear_telemetry() -> None:
         _TELEMETRY_VERSION += 1
 
 
+class _ExecMetrics:
+    """Cached children for the execution emit (once per executed BUCKET,
+    not per request; docs/observability.md).  Only the us/point
+    distribution and the execution count are written here -- they have no
+    other home, since the bespoke telemetry keeps windowed samples, not
+    histograms.  Per-client totals are served by the scrape-time
+    ``_collect_clients`` collector over ``client_stats()`` instead."""
+
+    __slots__ = ("_exec", "_us", "_by_bw")
+
+    def __init__(self):
+        reg = obs.default_registry()
+        self._exec = reg.counter(
+            "repro_executions_total", "Executed buckets by executable.",
+            labelnames=("backend", "workload"))
+        self._us = reg.histogram(
+            "repro_execution_us_per_point",
+            "Measured microseconds per real point per executed bucket.",
+            labelnames=("backend", "workload"))
+        self._by_bw = {}
+
+    def children(self, backend: str, workload: str):
+        key = (backend, workload)
+        ent = self._by_bw.get(key)
+        if ent is None:
+            ent = self._by_bw[key] = (
+                self._exec.child(backend=backend, workload=workload),
+                self._us.child(backend=backend, workload=workload))
+        return ent
+
+
+_EXEC_MX = None
+
+
+def _exec_mx() -> _ExecMetrics:
+    global _EXEC_MX
+    if _EXEC_MX is None:
+        _EXEC_MX = _ExecMetrics()
+    return _EXEC_MX
+
+
+def _flush_exec_mx() -> None:
+    global _EXEC_MX
+    _EXEC_MX = None
+
+
+obs.on_reset(_flush_exec_mx)
+
+
+def _collect_clients(reg) -> None:
+    """Scrape-time collector: per-client serving totals as views over the
+    ``client_stats()`` telemetry the dispatcher already maintains."""
+    if not obs.enabled():
+        return
+    totals = client_stats()
+    if not totals:
+        return
+    pts = reg.counter("repro_client_points_total",
+                      "Rows executed on behalf of each client.",
+                      labelnames=("client",))
+    bat = reg.counter("repro_client_batches_total",
+                      "Buckets that carried at least one row of each "
+                      "client.", labelnames=("client",))
+    for cid, tot in totals.items():
+        pts.child(client=cid).set(tot["points"])
+        bat.child(client=cid).set(tot["batches"])
+
+
+obs.default_registry().set_collector("engine.clients", _collect_clients)
+
+
 def record_execution(signature, backend: str, workload: str, *,
                      bucket: int, n_points: int, elapsed_s: float,
                      now: Optional[float] = None,
@@ -271,6 +344,15 @@ def record_execution(signature, backend: str, workload: str, *,
         if best < entry["best_us"] or best > entry["best_us"] * _TELEMETRY_DRIFT:
             entry["best_us"] = float(best)
             _TELEMETRY_VERSION += 1
+    # emit the distribution OUTSIDE the telemetry lock; once per bucket,
+    # so this does not scale with request rate.  The bespoke dicts above
+    # stay the source of truth for the consult path and the stats()
+    # views; counters derivable from them are fed by scrape-time
+    # collectors instead (parity witnessed in tests/test_obs.py)
+    if obs.enabled():
+        exec_c, us_c = _exec_mx().children(backend, workload)
+        exec_c.inc()
+        us_c.observe(us_per_point)
 
 
 def execution_stats() -> list[dict]:

@@ -107,6 +107,7 @@ import threading
 import time
 from typing import Callable, Optional
 
+from repro import obs
 from repro.serving.admission import (DEFAULT_PRIORITY, AdmissionController,
                                      ClientPolicy, ServiceClosed,
                                      ServiceOverloaded, ServiceQueueFull)
@@ -244,6 +245,13 @@ class CurvatureService:
             admission=admission, coalesce_across_n=coalesce_across_n,
             coalesce_waste_max=coalesce_waste_max)
         self._dispatcher = Dispatcher(self._sched, workers=workers)
+        # scrape-time metrics: the scheduler snapshots its live telemetry
+        # into the registry when an exporter asks -- nothing per request.
+        # Keyed per instance; shutdown() takes one final snapshot and
+        # removes it so a later service's counters own the series.
+        self._collector_key = f"service-{id(self)}"
+        obs.default_registry().set_collector(
+            self._collector_key, self._sched.collect_metrics)
         self._retune_stop = threading.Event()
         self._retune_thread: Optional[threading.Thread] = None
         if start:
@@ -319,7 +327,8 @@ class CurvatureService:
                n_probes: Optional[int] = None, block: bool = True,
                timeout: Optional[float] = None,
                client: Optional[str] = None,
-               priority: str = DEFAULT_PRIORITY):
+               priority: str = DEFAULT_PRIORITY,
+               trace=None):
         """Enqueue one request; returns a Future of the single-point result.
 
         Flat plans (``plan.n`` an int):
@@ -358,7 +367,7 @@ class CurvatureService:
         """
         return self._sched.submit(
             plan, a, v, workload=workload, n_probes=n_probes, block=block,
-            timeout=timeout, client=client, priority=priority)
+            timeout=timeout, client=client, priority=priority, trace=trace)
 
     # -- dispatch side ------------------------------------------------------
 
@@ -431,7 +440,7 @@ class CurvatureService:
                if c / total >= self.retune_min_share}
         if not mix:
             return None
-        need, forced = {}, set()
+        need, forced, drift = {}, set(), {}
         for b, w in mix.items():
             if b not in q.tuned_us:
                 need[b] = w             # new bucket in the traffic mix
@@ -445,7 +454,8 @@ class CurvatureService:
                     > self.drift_factor * base):
                 need[b] = w
                 forced.add(b)
-        return mix, need, forced
+                drift[b] = tel["recent_us_mean"] / base
+        return mix, need, forced, drift
 
     def _run_tuner(self, q, need: dict, forced: set) -> dict:
         """One sweep against the observed buckets (no locks held: the tuner
@@ -460,15 +470,26 @@ class CurvatureService:
             options=p.options, workload=q.workload,
             deadline_s=self.retune_deadline_s, force=bool(forced))
 
-    def _apply_tuned(self, q, tuned: dict) -> int:
+    def _apply_tuned(self, q, tuned: dict):
         """Install winner executables per bucket.  Caller holds the lock.
 
         The swap is a dict assignment: queued requests are untouched, the
         next execute for that bucket simply resolves to the new
         (already compiled -- ``apply_bucket_config`` reproduces the probe
-        plan's cache key) executable.  Zero dropped requests by design."""
+        plan's cache key) executable.  Zero dropped requests by design.
+
+        Returns (swaps, changes): ``changes`` describes each per-bucket
+        decision -- old/new (backend, csize, blk_m, dtype_policy) plus the
+        new tuned us/point baseline -- and feeds the structured retune
+        event the flight recorder keeps (docs/observability.md)."""
         from .autotune import apply_bucket_config
-        swaps = 0
+
+        def _cfg_view(ep, backend):
+            return {"backend": backend, "csize": ep.csize,
+                    "blk_m": ep.opt("blk_m"),
+                    "dtype_policy": ep.opt("dtype_policy", "fp32")}
+
+        swaps, changes = 0, []
         for b, cfg in tuned.items():
             if cfg is None:
                 continue
@@ -477,11 +498,19 @@ class CurvatureService:
             prev = q.exec_by_bucket.get(int(b))
             if prev is not None and prev[2] == key:
                 q.tuned_us[int(b)] = cfg.us_per_point  # refreshed baseline
+                changes.append({"bucket": int(b), "swapped": False,
+                                "new": _cfg_view(ep, cfg.backend),
+                                "tuned_us": cfg.us_per_point})
                 continue
+            old = (_cfg_view(prev[0], prev[1]) if prev is not None
+                   else _cfg_view(q.plan, q.backend))
             q.exec_by_bucket[int(b)] = (ep, cfg.backend, key)
             q.tuned_us[int(b)] = cfg.us_per_point
             swaps += 1
-        return swaps
+            changes.append({"bucket": int(b), "swapped": True, "old": old,
+                            "new": _cfg_view(ep, cfg.backend),
+                            "tuned_us": cfg.us_per_point})
+        return swaps, changes
 
     def _tune_queue_knobs(self, q) -> None:
         """Fit the per-queue dispatcher knobs from arrival rate + learned
@@ -520,20 +549,33 @@ class CurvatureService:
                     continue
                 summary["queues_examined"] += 1
                 work.append((q, *decision))
-        for q, mix, need, forced in work:
+        for q, mix, need, forced, drift in work:
+            # per-bucket trigger taxonomy for the structured event: a
+            # bucket is re-tuned because it is NEW in the traffic mix or
+            # because its winner DRIFTED past the baseline; a pass with
+            # nothing to sweep is a fresh-epoch knob refit
+            triggers = {b: ("drift" if b in forced else "new_bucket")
+                        for b in need}
             tuned = {}
             if need:
                 try:
                     tuned = self._run_tuner(q, need, forced)
-                except Exception:
+                except Exception as e:
                     summary["errors"] += 1
                     with self._lock:
                         self._stats["retune_errors"] += 1
+                    if obs.enabled():
+                        obs.event(
+                            "retune_error",
+                            f=getattr(q.plan.f, "__name__", repr(q.plan.f)),
+                            n=q.plan.n, workload=q.workload,
+                            error=type(e).__name__)
                     continue
             with self._lock:
-                swaps = self._apply_tuned(q, tuned)
+                swaps, changes = self._apply_tuned(q, tuned)
                 if self.tune_dispatch:
                     self._tune_queue_knobs(q)
+                knobs = (q.max_batch, q.max_wait_us)
                 # the epoch resets AFTER a successful pass: the next shift
                 # is judged against fresh traffic only
                 q.epoch_counts.clear()
@@ -542,6 +584,32 @@ class CurvatureService:
                 self._stats["hot_swaps"] += swaps
                 summary["queues_tuned"] += 1
                 summary["hot_swaps"] += swaps
+            if obs.enabled():
+                # answers "why did the service re-tune?": the trigger per
+                # bucket, measured drift ratio vs the tuned baseline, the
+                # old/new configs and the refit dispatcher knobs
+                obs.event(
+                    "retune",
+                    f=getattr(q.plan.f, "__name__", repr(q.plan.f)),
+                    n=q.plan.n, workload=q.workload,
+                    mix={str(b): round(w, 4) for b, w in mix.items()},
+                    triggers={str(b): t for b, t in triggers.items()},
+                    drift={str(b): round(r, 3) for b, r in drift.items()},
+                    changes=repr(changes), hot_swaps=swaps,
+                    max_batch=knobs[0], max_wait_us=knobs[1])
+                reg = obs.default_registry()
+                rc = reg.counter(
+                    "repro_retunes_total",
+                    "Re-tune passes applied, by dominant trigger.",
+                    labelnames=("trigger",))
+                dominant = ("drift" if forced
+                            else ("new_bucket" if need else "knob_refit"))
+                rc.inc(trigger=dominant)
+                if swaps:
+                    reg.counter(
+                        "repro_hot_swaps_total",
+                        "Per-bucket executable hot-swaps installed by "
+                        "re-tune passes.").inc(swaps)
         return summary
 
     def _retune_loop(self) -> None:
@@ -623,11 +691,25 @@ class CurvatureService:
             # workers exit on their own via the drain branch (queues are
             # already empty -- pending futures were failed above)
             self._dispatcher.threads = []
+            self._retire_collector()
             return
         had_workers = bool(self._dispatcher.threads)
         self._dispatcher.join()
         if not had_workers:
             self.flush()            # start=False services drain inline
+        self._retire_collector()
+
+    def _retire_collector(self) -> None:
+        """Freeze this service's metric series at their final values and
+        stop collecting for it (idempotent)."""
+        key, self._collector_key = self._collector_key, None
+        if key is None:
+            return
+        reg = obs.default_registry()
+        try:
+            self._sched.collect_metrics(reg)
+        finally:
+            reg.remove_collector(key)
 
     def close(self) -> None:
         """Alias for ``shutdown(wait=True)`` (drain and join)."""

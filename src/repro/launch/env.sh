@@ -1,0 +1,72 @@
+# Host-level tuned launch environment for the curvature server.
+#
+# Source this before starting a serving process (or let the entrypoint
+# apply the same settings with `python -m repro.launch.serve --tuned-env`):
+#
+#   source src/repro/launch/env.sh
+#   python -m repro.launch.serve --port 7311
+#
+# Each knob, and when it matters (details in docs/observability.md):
+#
+# * tcmalloc via LD_PRELOAD -- glibc malloc serializes the large, short-
+#   lived host allocations the serving stack makes per bucket (request
+#   marshalling, padded stacking, result copies) across dispatch workers;
+#   tcmalloc's thread-caching allocator removes that contention.  Matters
+#   once you run >1 dispatch worker or large max_batch; harmless (a few MB
+#   of cache) on a single worker.  Skipped automatically when the library
+#   is not installed.
+#
+# * TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD -- tcmalloc logs a warning (with
+#   a stack trace) for any single allocation above the default ~1GB; a
+#   server padding big buckets trips it routinely.  Raising the threshold
+#   to 60GB keeps the hot path free of stderr stalls.  Only meaningful
+#   with tcmalloc preloaded.
+#
+# * TF_CPP_MIN_LOG_LEVEL=4 -- silences the XLA/TSL C++ info/warning spam
+#   (one line per compilation!) that otherwise interleaves with the
+#   server's own logs and costs a write(2) on compile-heavy phases.
+#   Always safe; set it to 0 when debugging a compiler issue.
+#
+# * XLA_FLAGS --xla_force_host_platform_device_count -- on a CPU-only host
+#   jax exposes ONE device, so the dispatch layer runs one worker and
+#   sharded_rows plans cannot spread.  Forcing N host devices lets the
+#   dispatcher drain N plan queues concurrently and exercises the
+#   multi-device code paths.  Leave unset on real accelerator hosts (the
+#   flag only affects the CPU platform) and in pytest (tests assume the
+#   default device set).  Default here: number of physical cores, capped
+#   at 8.
+#
+# Idempotent: sourcing twice does not stack LD_PRELOAD entries.
+
+_repro_tcmalloc=""
+for _cand in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+             /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4 \
+             /usr/lib/libtcmalloc.so.4; do
+    if [ -e "$_cand" ]; then
+        _repro_tcmalloc="$_cand"
+        break
+    fi
+done
+if [ -n "$_repro_tcmalloc" ]; then
+    case ":${LD_PRELOAD:-}:" in
+        *":$_repro_tcmalloc:"*) ;;      # already preloaded
+        *) export LD_PRELOAD="$_repro_tcmalloc${LD_PRELOAD:+:$LD_PRELOAD}" ;;
+    esac
+    export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+    echo "env.sh: tcmalloc preloaded ($_repro_tcmalloc)"
+else
+    echo "env.sh: tcmalloc not found, keeping glibc malloc"
+fi
+unset _repro_tcmalloc _cand
+
+export TF_CPP_MIN_LOG_LEVEL=${TF_CPP_MIN_LOG_LEVEL:-4}
+
+if [ -z "${XLA_FLAGS:-}" ]; then
+    _repro_cores=$(nproc 2>/dev/null || echo 1)
+    _repro_devices=$(( _repro_cores < 8 ? _repro_cores : 8 ))
+    export XLA_FLAGS="--xla_force_host_platform_device_count=$_repro_devices"
+    echo "env.sh: XLA_FLAGS=$XLA_FLAGS"
+    unset _repro_cores _repro_devices
+else
+    echo "env.sh: XLA_FLAGS already set, leaving it alone"
+fi

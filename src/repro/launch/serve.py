@@ -10,6 +10,17 @@ requested ``n``.
   # serve until interrupted:
   python -m repro.launch.serve --port 7311 --high-water 2048
 
+  # with the host-level tuned environment (tcmalloc, XLA device count,
+  # quiet XLA logs -- re-execs once with the env applied; see
+  # launch/env.sh for the same thing as a sourceable script):
+  python -m repro.launch.serve --tuned-env apply --port 7311
+
+  # print the tuned env as export lines for the current shell:
+  eval "$(python -m repro.launch.serve --tuned-env print)"
+
+  # Prometheus /metrics + /trace on a sidecar HTTP port:
+  python -m repro.launch.serve --port 7311 --metrics-port 9100
+
   # end-to-end selftest (ephemeral port, client round-trips, exit code):
   python -m repro.launch.serve --selftest
 
@@ -20,13 +31,76 @@ The old token-decode driver moved with its engine to
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
 import numpy as np
 
-from repro import engine
+from repro import engine, obs
 from repro.core import testfns
 from repro.serving.frontend import CurvatureFrontend, connect
+
+_TCMALLOC_CANDIDATES = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+    "/usr/lib/libtcmalloc.so.4",
+)
+
+
+def tuned_env() -> dict:
+    """The host-level tuned launch environment (mirrors launch/env.sh).
+
+    Returns only the variables that are MISSING from the current
+    environment -- already-set values are respected, and the tcmalloc
+    preload is skipped when the library is not installed.  Rationale per
+    knob lives in env.sh / docs/observability.md."""
+    want = {}
+    lib = next((c for c in _TCMALLOC_CANDIDATES if os.path.exists(c)), None)
+    if lib is not None and lib not in os.environ.get("LD_PRELOAD", ""):
+        pre = os.environ.get("LD_PRELOAD")
+        want["LD_PRELOAD"] = f"{lib}:{pre}" if pre else lib
+        want.setdefault("TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD",
+                        "60000000000")
+    if "TF_CPP_MIN_LOG_LEVEL" not in os.environ:
+        want["TF_CPP_MIN_LOG_LEVEL"] = "4"
+    if "XLA_FLAGS" not in os.environ:
+        devices = min(os.cpu_count() or 1, 8)
+        want["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={devices}")
+    return want
+
+
+def apply_tuned_env() -> None:
+    """Re-exec this process once with the tuned env applied.
+
+    LD_PRELOAD and XLA_FLAGS only take effect at process start (the
+    dynamic linker / jax platform init read them before main), so
+    "apply" means exec, not os.environ mutation.  A guard variable
+    prevents a re-exec loop when nothing else changes."""
+    if os.environ.get("_REPRO_TUNED_ENV") == "1":
+        return
+    want = tuned_env()
+    env = dict(os.environ)
+    env.update(want)
+    env["_REPRO_TUNED_ENV"] = "1"
+    if want:
+        print("tuned-env: applying "
+              + " ".join(f"{k}={v}" for k, v in sorted(want.items())),
+              flush=True)
+    argv, skip = [], False
+    for a in sys.argv[1:]:
+        if skip:
+            skip = False
+            continue
+        if a == "--tuned-env":
+            skip = True        # also drop its separate value token
+            continue
+        if a.startswith("--tuned-env="):
+            continue
+        argv.append(a)
+    os.execve(sys.executable, [sys.executable, "-m", "repro.launch.serve",
+                               *argv], env)
 
 
 def build_plans(functions, symmetric: bool = False) -> dict:
@@ -115,10 +189,42 @@ def main():
     ap.add_argument("--burst", type=int, default=32)
     ap.add_argument("--retune-interval-s", type=float, default=None,
                     help="enable the online re-tune thread")
+    ap.add_argument("--tuned-env", choices=("print", "apply"), default=None,
+                    help="host-level tuned environment (tcmalloc preload, "
+                         "TF_CPP_MIN_LOG_LEVEL, XLA host device count; see "
+                         "launch/env.sh): 'print' emits export lines and "
+                         "exits, 'apply' re-execs the server with the env "
+                         "in effect")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus /metrics, /metrics.json and "
+                         "/trace on this sidecar HTTP port (0 = ephemeral)")
+    ap.add_argument("--no-obs", action="store_true",
+                    help="disable the observability subsystem (tracing + "
+                         "metrics; docs/observability.md)")
+    ap.add_argument("--trace-buffer", type=int, default=256,
+                    help="flight-recorder capacity (finished traces kept)")
+    ap.add_argument("--slow-ms", type=float, default=100.0,
+                    help="slow-request threshold: traces at least this "
+                         "long are pinned in the slow ring")
     ap.add_argument("--selftest", action="store_true",
                     help="serve on an ephemeral port, run client "
                          "round-trips, exit")
     args = ap.parse_args()
+
+    if args.tuned_env == "print":
+        for k, v in sorted(tuned_env().items()):
+            print(f"export {k}='{v}'")
+        return
+    if args.tuned_env == "apply":
+        apply_tuned_env()       # no return on the exec path
+
+    if args.no_obs:
+        obs.disable()
+    else:
+        from repro.obs import trace as _obs_trace
+        _obs_trace._replace_default(obs.FlightRecorder(
+            capacity=args.trace_buffer,
+            slow_threshold_s=args.slow_ms * 1e-3))
 
     plans = build_plans([f.strip() for f in args.functions.split(",") if
                          f.strip()])
@@ -135,7 +241,14 @@ def main():
     host, port = fe.address
     print(f"curvature server on {host}:{port} "
           f"(functions: {sorted(plans)}; cross-n "
-          f"{'off' if args.no_cross_n else 'on'})")
+          f"{'off' if args.no_cross_n else 'on'}; obs "
+          f"{'off' if args.no_obs else 'on'})")
+    metrics_srv = None
+    if args.metrics_port is not None:
+        from repro.obs.http import start_metrics_server
+        metrics_srv = start_metrics_server(args.host, args.metrics_port)
+        print(f"metrics on http://{args.host}:{metrics_srv.port}/metrics "
+              f"(/metrics.json, /trace)")
     try:
         if args.selftest:
             raise SystemExit(selftest(fe))
@@ -147,6 +260,8 @@ def main():
     except KeyboardInterrupt:
         print("shutting down")
     finally:
+        if metrics_srv is not None:
+            metrics_srv.close()
         fe.stop()
         svc.shutdown(wait=True)
 

@@ -1,0 +1,87 @@
+"""Profiling hooks: optional jax.profiler integration.
+
+Third observability pillar (docs/observability.md).  Two pieces:
+
+  * :func:`profile_session` -- ``with obs.profile_session(dir):``
+    captures a jax profiler trace (viewable in TensorBoard / Perfetto)
+    for the enclosed block.  Wired into ``benchmarks/run.py --profile``.
+  * :func:`annotate` -- named trace annotations around plan executions
+    so device timelines show *which* plan/bucket a kernel belongs to.
+    Dispatch guards with :func:`is_active` (a plain bool read) so the
+    annotation context manager is never even constructed outside a
+    capture session.
+
+jax is imported lazily and failures degrade to no-ops: the obs package
+stays dependency-free, and profiling on hosts without a working
+profiler plugin silently does nothing rather than breaking serving.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+__all__ = ["profile_session", "annotate", "is_active"]
+
+_active = False
+_lock = threading.Lock()
+
+
+def is_active() -> bool:
+    """True while a profile_session capture is running (plain bool read
+    -- safe to check per-batch on the dispatch hot path)."""
+    return _active
+
+
+@contextlib.contextmanager
+def profile_session(log_dir: str, *, create_perfetto_link: bool = False):
+    """Capture a jax profiler trace for the enclosed block into log_dir.
+
+    Nested/concurrent sessions are rejected (the jax profiler is a
+    process-global singleton).  If jax or its profiler is unavailable
+    the block still runs, unprofiled.
+    """
+    global _active
+    try:
+        from jax import profiler as _jp
+    except Exception:
+        yield None
+        return
+    with _lock:
+        if _active:
+            raise RuntimeError("a profile_session is already active")
+        _active = True
+    started = False
+    try:
+        try:
+            _jp.start_trace(str(log_dir),
+                            create_perfetto_link=create_perfetto_link)
+            started = True
+        except Exception:
+            pass
+        yield log_dir if started else None
+    finally:
+        if started:
+            try:
+                _jp.stop_trace()
+            except Exception:
+                pass
+        with _lock:
+            _active = False
+
+
+def annotate(name: str):
+    """A TraceAnnotation context manager naming the enclosed device work.
+
+    Returns a real ``jax.profiler.TraceAnnotation`` while a capture is
+    active, a no-op context otherwise.  Callers on hot paths should gate
+    construction on :func:`is_active` themselves; this fallback exists
+    for call sites that don't.
+    """
+    if _active:
+        try:
+            from jax import profiler as _jp
+            return _jp.TraceAnnotation(name)
+        except Exception:
+            pass
+    return contextlib.nullcontext()

@@ -35,6 +35,8 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Optional
 
+from repro import obs
+
 __all__ = [
     "ServiceClosed", "ServiceQueueFull", "ServiceOverloaded",
     "PRIORITIES", "DEFAULT_PRIORITY", "priority_rank",
@@ -66,6 +68,23 @@ class ServiceOverloaded(RuntimeError):
 PRIORITIES = ("interactive", "batch")
 DEFAULT_PRIORITY = "batch"
 _RANK = {p: i for i, p in enumerate(PRIORITIES)}
+
+# cached shed-counter children (rejections are off the happy path, but a
+# shed storm should not pay label resolution per refusal either)
+_SHED_CHILDREN: dict = {}
+
+
+def _shed_child(reason: str):
+    c = _SHED_CHILDREN.get(reason)
+    if c is None:
+        c = _SHED_CHILDREN[reason] = obs.default_registry().counter(
+            "repro_admission_shed_total",
+            "Requests refused by admission control.",
+            labelnames=("reason",)).child(reason=reason)
+    return c
+
+
+obs.on_reset(_SHED_CHILDREN.clear)
 
 
 def priority_rank(priority: str) -> int:
@@ -182,6 +201,8 @@ class AdmissionController:
             if self.depth() >= limit:
                 with self._lock:
                     self.shed["depth"] += 1
+                if obs.enabled():
+                    _shed_child("depth").inc()
                 raise ServiceOverloaded(
                     f"load shedding: {self.depth()} requests pending >= "
                     f"{limit} ({priority} high-water mark)")
@@ -196,6 +217,8 @@ class AdmissionController:
                     pol.rate, pol.burst)
             if not bucket.try_take(t, cost):
                 self.shed["rate"] += 1
+                if obs.enabled():
+                    _shed_child("rate").inc()
                 retry = bucket.retry_after(cost)
                 raise ServiceOverloaded(
                     f"client {client!r} over rate limit "

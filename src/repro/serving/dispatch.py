@@ -39,12 +39,44 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.engine import registry
 from repro.engine.plan import bucket_size, pad_cols, pad_rows
 
 from .scheduler import PlanQueue, Scheduler
 
 __all__ = ["Dispatcher"]
+
+
+def _record_batch_spans(live, t0: float, t1: float, meta: dict) -> None:
+    """Attach the scheduling/execution spans to every traced request of a
+    batch.  ``meta`` is ONE shared dict per batch (bucket id, pad stats,
+    cross-n family) referenced by all member spans -- the flight recorder
+    never mutates it.
+
+    Selection, coalescing and device execution are batch-level instants
+    (``take_ready_batch`` stamps one ``selected`` time on every member),
+    so those three spans are built ONCE as a shared tuple-of-tuples and
+    extended onto each member's span list; only the enqueue span differs
+    per request (its own submit time)."""
+    shared = None
+    for r in live:
+        tr = r.trace
+        if tr is None:
+            continue
+        sel = tr.marks.get("selected", t0)
+        if shared is None:
+            shared = (("coalesce", sel, sel, meta),
+                      ("dispatch_wait", sel, t0, None),
+                      ("device_execute", t0, t1, meta))
+        tr.add_span("enqueue", tr.marks.get("enqueued", tr.t_start), sel)
+        tr.spans.extend(shared)
+
+
+def _fail_traces(live, exc: Exception) -> None:
+    for r in live:
+        if r.trace is not None:
+            r.trace.finish(error=type(exc).__name__)
 
 
 class Dispatcher:
@@ -130,6 +162,11 @@ class Dispatcher:
     def execute(self, q: PlanQueue, reqs) -> None:
         """Run one coalesced bucket and resolve its futures."""
         live = [r for r in reqs if r.future.set_running_or_notify_cancel()]
+        if len(live) != len(reqs):
+            alive = set(map(id, live))
+            for r in reqs:
+                if id(r) not in alive and r.trace is not None:
+                    r.trace.finish(error="cancelled")
         if not live:
             return
         if q.group is not None and len({r.n for r in live}) > 1:
@@ -160,18 +197,27 @@ class Dispatcher:
                 # row's budget (their output is sliced off anyway)
                 P = jnp.asarray(pad_rows(
                     np.asarray([r.p for r in live], np.int32), bucket))
-                out = xplan.executable(q.workload)(A, V, P)
-            elif q.spec is not None:
-                out = xplan.executable(q.workload)(A, V)
-            elif V is not None:
-                out = xplan.executable(q.workload)(A, V)
+                xargs = (A, V, P)
+            elif V is not None:        # pytree + flat hvp/diag alike
+                xargs = (A, V)
             else:
-                out = xplan.executable(q.workload)(A)
+                xargs = (A,)
+            exe = xplan.executable(q.workload)
+            if obs.is_active():
+                # name device work in the profiler timeline; the is_active
+                # pre-check keeps the annotation object off the hot path
+                # outside capture sessions
+                with obs.annotate(
+                        f"repro:{q.workload}:{xbackend}:b{bucket}"):
+                    out = exe(*xargs)
+            else:
+                out = exe(*xargs)
             out = np.asarray(jax.block_until_ready(out))
             elapsed = time.perf_counter() - t0
         except Exception as e:
             for r in live:
                 r.future.set_exception(e)
+            _fail_traces(live, e)
             return
         # telemetry charges the executable that actually ran -- after a
         # hot-swap the winner's signature accumulates the fresh history the
@@ -187,7 +233,15 @@ class Dispatcher:
             sched.stats["buckets"][bucket] += 1
             q.epoch_counts[bucket] += k
             q.epoch_points += k
+        traced = obs.enabled()
+        if traced:
+            meta = {"bucket": bucket, "rows": k,
+                    "padded_rows": bucket - k, "backend": xbackend,
+                    "workload": q.workload, "ragged": False}
+            _record_batch_spans(live, t0, t0 + elapsed, meta)
         for i, r in enumerate(live):
+            tr = r.trace if traced else None
+            r0 = tr.clock() if tr is not None else 0.0
             # copy: out[i] would be a view pinning the whole padded bucket
             # (max_batch rows) for as long as the client keeps its result
             row = out[i].copy()
@@ -196,8 +250,15 @@ class Dispatcher:
                     row = q.spec.unravel(row)
                 except Exception as e:      # pragma: no cover - spec bug
                     r.future.set_exception(e)
+                    if tr is not None:
+                        tr.finish(error=type(e).__name__)
                     continue
             r.future.set_result(row)
+            if tr is not None:
+                # "respond" covers unravel + future resolution, which runs
+                # the frontend's done-callback (socket write) synchronously
+                tr.add_span("respond", r0, tr.clock())
+                tr.finish()
 
     def _execute_ragged(self, q: PlanQueue, live) -> None:
         """Run one mixed-n bucket through the family's ragged executable."""
@@ -215,12 +276,20 @@ class Dispatcher:
             NE = jnp.asarray(pad_rows(
                 np.asarray([r.n for r in live], np.int32), bucket))
             t0 = time.perf_counter()
-            out = gplan.executable("batched_hvp_ragged")(A, V, NE)
+            exe = gplan.executable("batched_hvp_ragged")
+            if obs.is_active():
+                with obs.annotate(
+                        f"repro:batched_hvp_ragged:{gbackend}"
+                        f":b{bucket}:n{n_pad}"):
+                    out = exe(A, V, NE)
+            else:
+                out = exe(A, V, NE)
             out = np.asarray(jax.block_until_ready(out))
             elapsed = time.perf_counter() - t0
         except Exception as e:
             for r in live:
                 r.future.set_exception(e)
+            _fail_traces(live, e)
             return
         registry.record_execution(gkey, gbackend, "batched_hvp_ragged",
                                   bucket=bucket, n_points=k,
@@ -236,8 +305,23 @@ class Dispatcher:
             # NOT counted into q.epoch_counts: the re-tune loop reasons
             # about the queue's dense executables, and ragged batches run
             # the group plan instead
+        traced = obs.enabled()
+        if traced:
+            ns = [r.n for r in live]
+            meta = {"bucket": bucket, "rows": k,
+                    "padded_rows": bucket - k, "backend": gbackend,
+                    "workload": "batched_hvp_ragged", "ragged": True,
+                    "family": q.group.family.name, "n_pad": n_pad,
+                    "pad_waste": round(
+                        1.0 - sum(ns) / float(len(ns) * n_pad), 4)}
+            _record_batch_spans(live, t0, t0 + elapsed, meta)
         for i, r in enumerate(live):
+            tr = r.trace if traced else None
+            r0 = tr.clock() if tr is not None else 0.0
             r.future.set_result(out[i, :r.n].copy())
+            if tr is not None:
+                tr.add_span("respond", r0, tr.clock())
+                tr.finish()
 
     @staticmethod
     def _client_rows(live) -> Optional[dict]:

@@ -40,6 +40,8 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro import obs
+
 from .admission import DEFAULT_PRIORITY, ServiceClosed
 from . import protocol
 
@@ -239,22 +241,59 @@ class CurvatureFrontend:
                                 for k, v in stats["buckets"].items()}
             reply(protocol.result_frame(rid, stats))
             return
+        if method == "metrics":
+            fmt = frame.get("format", "json")
+            reg = obs.metrics_registry()
+            if fmt == "prometheus":
+                reply(protocol.result_frame(rid, reg.to_prometheus()))
+            elif fmt == "json":
+                reply(protocol.result_frame(rid, reg.to_json()))
+            else:
+                raise ValueError(
+                    f"metrics format must be 'json' or 'prometheus', "
+                    f"got {fmt!r}")
+            return
+        if method == "trace":
+            rec = obs.recorder()
+            k = int(frame.get("k", 16))
+            traces = (rec.slowest(k) if frame.get("slow")
+                      else rec.recent(k))
+            reply(protocol.result_frame(rid, {
+                "traces": [t.to_dict() for t in traces],
+                "events": rec.events(k),
+            }))
+            return
         if method not in ("hvp", "hessian"):
             raise ValueError(
                 f"unknown method {method!r}; expected one of "
                 f"{protocol.METHODS}")
-        if "a" not in frame:
-            raise ValueError(f"{method} frame needs \"a\"")
-        plan = self._plan_for(frame.get("plan"), frame.get("n"))
-        a = np.asarray(frame["a"], np.float32)
-        v = None
-        if method == "hvp":
-            if "v" not in frame:
-                raise ValueError("hvp frame needs \"v\"")
-            v = np.asarray(frame["v"], np.float32)
-        priority = frame.get("priority", DEFAULT_PRIORITY)
-        fut = self.service.submit(
-            plan, a, v, client=frame.get("client"), priority=priority)
+        # the trace starts HERE, at decode time, so queueing for admission
+        # and everything downstream -- including the response write, which
+        # runs inside the dispatch worker's done-callback -- lands on it
+        trace = obs.trace_begin(
+            rid=rid, method=method, client=frame.get("client"),
+            priority=frame.get("priority", DEFAULT_PRIORITY),
+            transport="tcp") if obs.enabled() else None
+        try:
+            if "a" not in frame:
+                raise ValueError(f"{method} frame needs \"a\"")
+            plan = self._plan_for(frame.get("plan"), frame.get("n"))
+            a = np.asarray(frame["a"], np.float32)
+            v = None
+            if method == "hvp":
+                if "v" not in frame:
+                    raise ValueError("hvp frame needs \"v\"")
+                v = np.asarray(frame["v"], np.float32)
+            priority = frame.get("priority", DEFAULT_PRIORITY)
+            fut = self.service.submit(
+                plan, a, v, client=frame.get("client"), priority=priority,
+                trace=trace)
+        except Exception as e:
+            # submit() seals the trace for its own rejections (finish is
+            # idempotent); this covers decode/marshal failures before it
+            if trace is not None:
+                trace.finish(error=type(e).__name__)
+            raise
 
         def _done(f: Future, _rid=rid) -> None:
             exc = f.exception()
@@ -380,6 +419,19 @@ class CurvatureClient:
 
     def stats(self, timeout: Optional[float] = 10.0) -> dict:
         return self._call("stats").result(timeout)
+
+    def metrics(self, format: str = "json",
+                timeout: Optional[float] = 10.0):
+        """The server's obs metrics registry: a dict (``format="json"``)
+        or the Prometheus text exposition as one string."""
+        return self._call("metrics", format=format).result(timeout)
+
+    def trace(self, k: int = 16, slow: bool = False,
+              timeout: Optional[float] = 10.0) -> dict:
+        """Recent (or slowest-k) request traces + recorded events from
+        the server's flight recorder."""
+        return self._call("trace", k=int(k),
+                          slow=True if slow else None).result(timeout)
 
     # -- lifecycle ----------------------------------------------------------
 

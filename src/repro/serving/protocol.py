@@ -20,6 +20,13 @@ Methods:
   ping    : liveness probe -> result "pong"
   plans   : -> result {name: {"family": bool}} of the served plan registry
   stats   : -> result the service's stats() snapshot
+  metrics : -> result the obs metrics registry; ``"format": "json"``
+            (default, the structured exporter) or ``"prometheus"`` (the
+            text exposition format as one string)
+  trace   : -> result {"traces": [...], "events": [...]} from the obs
+            flight recorder; ``"k"`` bounds the count (default 16),
+            ``"slow": true`` selects the slowest-k view instead of the
+            most recent (docs/observability.md)
 
 Response frame::
 
@@ -54,7 +61,7 @@ __all__ = [
     "code_for", "exception_for",
 ]
 
-METHODS = ("hvp", "hessian", "ping", "plans", "stats")
+METHODS = ("hvp", "hessian", "ping", "plans", "stats", "metrics", "trace")
 
 _EXC_CODE = (
     (ServiceOverloaded, "overloaded"),

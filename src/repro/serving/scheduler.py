@@ -46,6 +46,7 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.engine.opmodel import ragged_padding_waste
 from repro.engine.plan import CurvaturePlan
 from repro.engine.plan import plan as build_plan
@@ -67,6 +68,7 @@ class Request:
     n: Optional[int] = None      # flat row width (cross-n ragged dispatch)
     client: Optional[str] = None
     priority: str = DEFAULT_PRIORITY
+    trace: Optional[Any] = None  # obs.Trace (None when obs is disabled)
 
     @property
     def tagged(self) -> bool:
@@ -96,6 +98,12 @@ class PlanQueue:
     # virtual-time clocks of the weighted round-robin
     tagged: int = 0
     fair_vt: dict = field(default_factory=dict)
+    # cross-QUEUE arbitration clock: when several queues are ready at once
+    # and any carries tagged traffic, the queue with the smallest virtual
+    # time dispatches first, advancing by 1/(aggregate weight of its
+    # waiting clients) -- so the signature serving heavier clients gets a
+    # proportionally larger share of the dispatch slots
+    queue_vt: float = 0.0
     # -- cross-n state: the RaggedGroup this queue belongs to (None for
     # plans without a ragged family)
     group: Optional["RaggedGroup"] = None
@@ -181,6 +189,11 @@ class Scheduler:
         # hash per submit on the hot path.
         self.routes: dict = {}
         self.pending = 0
+        # per-priority submit counts (under ``lock``): the source the
+        # scrape-time repro_requests_total collector snapshots -- an int
+        # bump inside a lock we already hold, not a striped metric inc on
+        # the hot path (docs/observability.md)
+        self.by_priority: collections.Counter = collections.Counter()
         self.closed = False
         # admission sheds on the LIVE depth: wire our pending counter in
         # unless the controller came with its own depth source
@@ -199,9 +212,16 @@ class Scheduler:
                n_probes: Optional[int] = None, block: bool = True,
                timeout: Optional[float] = None,
                client: Optional[str] = None,
-               priority: str = DEFAULT_PRIORITY) -> Future:
-        """Validate, marshal, admit and enqueue one request."""
+               priority: str = DEFAULT_PRIORITY,
+               trace=None) -> Future:
+        """Validate, marshal, admit and enqueue one request.
+
+        ``trace`` carries a pre-started obs.Trace (the frontend begins one
+        at decode time so transport latency is on the trace); when absent
+        and observability is enabled, a trace is started here."""
         priority_rank(priority)             # reject unknown classes early
+        if trace is None and obs.enabled():
+            trace = obs.trace_begin(client=client, priority=priority)
         p = None
         n = None
         if plan.n is None:
@@ -244,52 +264,73 @@ class Scheduler:
                     raise ValueError(
                         f"submit expects v of shape ({plan.n},), got "
                         f"{v.shape}")
+        if trace is not None:
+            trace.meta["workload"] = workload
+            if n is not None:
+                trace.meta["n"] = n
         fut: Future = Future()
-        with self.space:
-            if self.closed:
-                raise ServiceClosed("CurvatureService is shut down")
-            if self.admission is not None:
-                # policy rejection (ServiceOverloaded) happens BEFORE the
-                # backpressure wait: a shed request must fail fast, not
-                # after blocking on a queue it was never going to enter
-                self.admission.admit(client, priority=priority)
-            if self.pending >= self.max_queue:
-                if not block:
-                    raise ServiceQueueFull(
-                        f"{self.pending} requests pending "
-                        f"(max_queue={self.max_queue})")
-                ok = self.space.wait_for(
-                    lambda: self.closed or self.pending < self.max_queue,
-                    timeout)
+        try:
+            with self.space:
                 if self.closed:
                     raise ServiceClosed("CurvatureService is shut down")
-                if not ok:
-                    raise ServiceQueueFull(
-                        f"queue still full after {timeout}s "
-                        f"(max_queue={self.max_queue})")
-            q = self.queues.get(key)
-            if q is None:
-                q = PlanQueue(plan=dplan, workload=workload,
-                              backend=backend, key=key, spec=spec)
-                self.queues[key] = q
-                self._maybe_join_group(q)
-            t = self.clock()
-            req = Request(a, v, fut, t, p, n=n, client=client,
-                          priority=priority)
-            q.requests.append(req)
-            if req.tagged:
-                q.tagged += 1
-            q.arrivals.append(t)        # rate window for the knob model
-            self.pending += 1
-            self.stats["submitted"] += 1
-            # wake a dispatch worker only on the transitions it cares
-            # about: a previously-empty service (workers may be in an
-            # unbounded wait) or a queue reaching a full bucket (dispatch
-            # now, not at deadline).  Anything in between is already
-            # covered by the deadline timer, and an Event.set per submit
-            # costs a lock on the hot path.
-            nudge = (self.pending == 1
-                     or len(q.requests) >= (q.max_batch or self.max_batch))
+                if self.admission is not None:
+                    # policy rejection (ServiceOverloaded) happens BEFORE
+                    # the backpressure wait: a shed request must fail fast,
+                    # not after blocking on a queue it was never going to
+                    # enter
+                    if trace is not None:
+                        with trace.span("admit"):
+                            self.admission.admit(client, priority=priority)
+                    else:
+                        self.admission.admit(client, priority=priority)
+                if self.pending >= self.max_queue:
+                    if not block:
+                        raise ServiceQueueFull(
+                            f"{self.pending} requests pending "
+                            f"(max_queue={self.max_queue})")
+                    ok = self.space.wait_for(
+                        lambda: self.closed or self.pending < self.max_queue,
+                        timeout)
+                    if self.closed:
+                        raise ServiceClosed("CurvatureService is shut down")
+                    if not ok:
+                        raise ServiceQueueFull(
+                            f"queue still full after {timeout}s "
+                            f"(max_queue={self.max_queue})")
+                q = self.queues.get(key)
+                if q is None:
+                    q = PlanQueue(plan=dplan, workload=workload,
+                                  backend=backend, key=key, spec=spec)
+                    self.queues[key] = q
+                    self._maybe_join_group(q)
+                t = self.clock()
+                req = Request(a, v, fut, t, p, n=n, client=client,
+                              priority=priority, trace=trace)
+                if trace is not None:
+                    trace.mark("enqueued")
+                q.requests.append(req)
+                if req.tagged:
+                    q.tagged += 1
+                q.arrivals.append(t)        # rate window for the knob model
+                self.pending += 1
+                self.stats["submitted"] += 1
+                self.by_priority[priority] += 1
+                # wake a dispatch worker only on the transitions it cares
+                # about: a previously-empty service (workers may be in an
+                # unbounded wait) or a queue reaching a full bucket
+                # (dispatch now, not at deadline).  Anything in between is
+                # already covered by the deadline timer, and an Event.set
+                # per submit costs a lock on the hot path.
+                nudge = (self.pending == 1
+                         or len(q.requests) >= (q.max_batch
+                                                or self.max_batch))
+        except Exception as e:
+            # shed / closed / queue-full: the request never entered a
+            # queue; seal its trace so the rejection is visible in the
+            # flight recorder rather than silently dropped
+            if trace is not None:
+                trace.finish(error=type(e).__name__)
+            raise
         if nudge:
             self.wake.set()
         return fut
@@ -384,16 +425,29 @@ class Scheduler:
     # -- batch selection ----------------------------------------------------
 
     def take_ready_batch(self, now, force: bool = False):
-        """Pop up to max_batch requests from the first ready queue.
+        """Pop up to max_batch requests from the chosen ready queue.
 
-        The served queue rotates to the back (round-robin), so one
-        continuously-full plan queue cannot starve the others past their
-        wait budget.  Returns (queue, requests) or None.  The requests may
-        include cross-n fills pulled from the queue's RaggedGroup siblings
-        (the dispatcher detects the mixed widths and routes the batch
-        through the family's ragged executable)."""
+        **Cross-queue arbitration**: when several queues are ready at the
+        same instant and none of them carries tagged traffic, the first in
+        rotation order is served and rotated to the back -- the exact
+        pre-layering round-robin, so one continuously-full plan queue
+        cannot starve the others past their wait budget.  When any ready
+        queue DOES carry tagged requests, queues compete by weighted
+        virtual time: the ready queue with the smallest ``queue_vt``
+        dispatches and advances its clock by 1 / (aggregate weight of the
+        distinct clients waiting in it), so a signature queue serving
+        weight-4 clients receives 4x the dispatch slots of one serving
+        weight-1 clients.  A queue re-joining after idling is clamped to
+        the current floor -- one turn of credit, not an unbounded backlog
+        of it.
+
+        Returns (queue, requests) or None.  The requests may include
+        cross-n fills pulled from the queue's RaggedGroup siblings (the
+        dispatcher detects the mixed widths and routes the batch through
+        the family's ragged executable)."""
         with self.space:
-            for key, q in list(self.queues.items()):
+            ready = []
+            for key, q in self.queues.items():
                 if not q.requests:
                     continue
                 # learned per-queue dispatcher knobs override the service
@@ -406,18 +460,42 @@ class Scheduler:
                     age_us = (now - q.requests[0].t_submit) * 1e6
                     if age_us < eff_wait:
                         continue
-                k = min(len(q.requests), eff_batch)
-                reqs = self._select(q, k)
-                if (q.group is not None and len(reqs) < eff_batch
-                        and not full):
-                    # only PARTIAL buckets are topped up: a full bucket has
-                    # zero padding waste, merging can only dilute it
-                    self._fill_cross_n(q, reqs, eff_batch)
-                self.pending -= len(reqs)
-                self.queues.move_to_end(key)
-                self.space.notify_all()
-                return q, reqs
-            return None
+                ready.append((key, q, eff_batch, full))
+            if not ready:
+                return None
+            if len(ready) == 1 or all(e[1].tagged == 0 for e in ready):
+                key, q, eff_batch, full = ready[0]    # FIFO fast path
+            else:
+                floor = min(e[1].queue_vt for e in ready)
+                key, q, eff_batch, full = min(
+                    ready, key=lambda e: e[1].queue_vt)
+                clients = {r.client for r in q.requests}
+                agg = sum(self.weight_of(c) for c in clients)
+                q.queue_vt = (max(q.queue_vt, floor)
+                              + 1.0 / max(agg, 1e-9))
+                if floor > 1e9:     # keep the clocks bounded
+                    for qq in self.queues.values():
+                        qq.queue_vt = max(qq.queue_vt - floor, 0.0)
+            k = min(len(q.requests), eff_batch)
+            reqs = self._select(q, k)
+            if (q.group is not None and len(reqs) < eff_batch
+                    and not full):
+                # only PARTIAL buckets are topped up: a full bucket has
+                # zero padding waste, merging can only dilute it
+                self._fill_cross_n(q, reqs, eff_batch)
+            self.pending -= len(reqs)
+            self.queues.move_to_end(key)
+            self.space.notify_all()
+        # one clock read for the whole batch: selection is a batch-level
+        # instant, and per-request clock calls are measurable at this rate
+        t_sel = None
+        for r in reqs:
+            tr = r.trace
+            if tr is not None:
+                if t_sel is None:
+                    t_sel = tr.clock()
+                tr.marks["selected"] = t_sel
+        return q, reqs
 
     def _select(self, q: PlanQueue, k: int) -> list:
         """Pick k requests from one queue honoring priority + fairness.
@@ -525,6 +603,66 @@ class Scheduler:
         remaining = deadline - self.clock()
         return max(remaining, 0.0) + 1e-4   # small slack past the deadline
 
+    # -- observability ------------------------------------------------------
+
+    def collect_metrics(self, reg) -> None:
+        """Scrape-time collector: snapshot the live scheduler/dispatch/
+        admission telemetry into the metrics registry.
+
+        Registered per service instance (``CurvatureService`` keys it by
+        id and removes it on shutdown after one final collect).  This is
+        the whole trick that keeps the serving hot path metric-free: the
+        counters below are views over state the stack already maintains
+        under its own locks -- nothing here runs per request.  Skipped
+        while observability is disabled so a disabled process exports
+        frozen values."""
+        if not obs.enabled():
+            return
+        with self.lock:
+            pending = self.pending
+            by_priority = dict(self.by_priority)
+            stats = dict(self.stats)
+            buckets = dict(stats.get("buckets", ()))
+            shed = dict(self.admission.shed) if self.admission is not None \
+                else {}
+        reg.gauge("repro_pending",
+                  "Requests currently queued or in flight.").child().set(
+            pending)
+        req = reg.counter("repro_requests_total",
+                          "Requests accepted into the scheduler.",
+                          labelnames=("priority",))
+        for p, v in by_priority.items():
+            req.child(priority=p).set(v)
+        reg.counter(
+            "repro_cross_n_fills_total",
+            "Requests merged into a sibling queue's bucket (cross-n "
+            "ragged coalescing).").child().set(
+            stats.get("cross_n_fills", 0))
+        reg.counter("repro_points_total",
+                    "Real (un-padded) points executed.").child().set(
+            stats.get("dispatched", 0))
+        batches = reg.counter("repro_batches_total",
+                              "Dispatched buckets by kind.",
+                              labelnames=("kind",))
+        ragged = stats.get("ragged_batches", 0)
+        batches.child(kind="dense").set(stats.get("batches", 0) - ragged)
+        batches.child(kind="ragged").set(ragged)
+        reg.counter("repro_padded_rows_total",
+                    "Padding rows executed (bucket size minus real "
+                    "rows).").child().set(stats.get("padded_rows", 0))
+        per_bucket = reg.counter("repro_bucket_batches_total",
+                                 "Dispatched buckets by bucket size.",
+                                 labelnames=("bucket",))
+        for b, v in buckets.items():
+            per_bucket.child(bucket=b).set(v)
+        if shed:
+            shed_c = reg.counter(
+                "repro_admission_shed_total",
+                "Requests shed by the admission controller.",
+                labelnames=("reason",))
+            for reason, v in shed.items():
+                shed_c.child(reason=reason).set(v)
+
     # -- shutdown support ---------------------------------------------------
 
     def fail_pending(self, exc: Exception) -> None:
@@ -536,4 +674,6 @@ class Scheduler:
                 self.pending -= 1
                 if r.future.set_running_or_notify_cancel():
                     r.future.set_exception(exc)
+                if r.trace is not None:
+                    r.trace.finish(error=type(exc).__name__)
             q.tagged = 0

@@ -21,6 +21,11 @@ from repro.models.params import init_params
 from repro.models.targets import diag_spectrum, lm_curvature_targets
 from repro.models.kv_quant import choose_kv_cache_dtype, kv_sensitivity
 
+# the zoo sweep compiles every architecture x workload: minutes, not
+# seconds.  CI runs it in its own job; the tier-1 lane deselects it with
+# ``-m "not slow"`` (pyproject registers the marker).
+pytestmark = pytest.mark.slow
+
 BATCH, SEQ = 2, 16          # seq 16 keeps the vlm configs' token span >= 8
 N_PROBES, CSIZE = 2, 2
 
